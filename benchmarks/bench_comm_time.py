@@ -1,0 +1,51 @@
+"""Table III reproduction: total communication time to target across the
+eight task profiles, ELSA (rho=3.3 sketch, the paper's recommended band) vs the uncompressed Vanilla
+model, via the Eq. 22-24 communication model.
+
+The paper reports 69.3%-73.7% reduction vs Vanilla; we reproduce the model
+with the paper's BERT-base numbers (D=768, fp32, B_n in [50,100] Mbps).
+"""
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core.comm_model import CommConfig, total_comm_time
+
+# (task, seq_len mu, rounds-to-target G for vanilla)
+TASKS = [("ag_news", 64, 60), ("banking", 48, 42), ("emotion", 48, 52),
+         ("trec", 32, 35), ("rte", 128, 38), ("cb", 128, 47),
+         ("multirc", 256, 52), ("squad", 192, 65)]
+
+
+def run(n_clients=20, seed=0):
+    rng = np.random.default_rng(seed)
+    bw = rng.uniform(50, 100, n_clients) * 1e6 / 8.0
+    batches = rng.integers(8, 33, n_clients).astype(float)
+    rows = {}
+
+    def compute():
+        out = {}
+        for task, mu, g_vanilla in TASKS:
+            base = dict(t_rounds=2, bytes_per_param=4.0, seq_len=mu,
+                        d_hidden=768, lora_bytes=4 * 2 * 768 * 8 * 12)
+            van = CommConfig(rho=1.0, **base)
+            # compression converges in slightly more rounds (fidelity loss)
+            elsa = CommConfig(rho=3.3, **base)
+            g_elsa = int(np.ceil(g_vanilla * 1.08))
+            t_v = total_comm_time(van, batches, bw, g_vanilla)
+            t_e = total_comm_time(elsa, batches, bw, g_elsa)
+            out[task] = (t_v, t_e, 1.0 - t_e / t_v)
+        return out
+
+    rows, us = timeit(compute, repeats=5)
+    for task, (tv, te, red) in rows.items():
+        emit(f"table3_commtime_{task}", us / len(TASKS),
+             f"vanilla_s={tv:.1f} elsa_s={te:.1f} reduction={red:.3f}")
+    reds = [r for _, _, r in rows.values()]
+    emit("table3_summary", us,
+         f"mean_reduction={np.mean(reds):.3f} (paper: 0.693-0.737 range "
+         f"vs vanilla at rho=3.26-3.78 effective)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,59 @@
+"""Pallas kernel timings (interpret mode on CPU — correctness-path cost,
+not TPU wall time) vs their pure-jnp oracles."""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.core.sketch import make_plan
+from repro.core.ssop import make_ssop
+from repro.kernels.count_sketch import ops as cs_ops
+from repro.kernels.count_sketch.ref import compress_ref
+from repro.core.sketch import selection_matrices
+from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+from repro.kernels.flash_attention.ref import attention_bhsd_ref
+from repro.kernels.lora import ops as lora_ops
+from repro.kernels.lora.ref import lora_matmul_ref
+from repro.kernels.ssop import ops as ssop_ops
+from repro.kernels.ssop.ref import ssop_apply_ref
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (8, 256, 64))
+    k = jax.random.normal(key, (2, 256, 64))
+    _, us_k = timeit(lambda: jax.block_until_ready(
+        flash_attention_bhsd(q, k, k, bq=128, bk=128)), repeats=3)
+    _, us_r = timeit(lambda: jax.block_until_ready(
+        attention_bhsd_ref(q, k, k)), repeats=3)
+    emit("kernel_flash_attention", us_k, f"ref_us={us_r:.1f}")
+
+    h = jax.random.normal(key, (256, 512))
+    plan = make_plan(512, 3, 64, seed=1)
+    s = selection_matrices(plan)
+    _, us_k = timeit(lambda: jax.block_until_ready(
+        cs_ops.sketch_compress(h, plan)), repeats=3)
+    _, us_r = timeit(lambda: jax.block_until_ready(
+        compress_ref(h, s)), repeats=3)
+    emit("kernel_count_sketch", us_k, f"ref_us={us_r:.1f}")
+
+    ss = make_ssop(jax.random.normal(key, (64, 512)), 16, "s", 0)
+    _, us_k = timeit(lambda: jax.block_until_ready(
+        ssop_ops.ssop_apply(h, ss.u, ss.v)), repeats=3)
+    w = ss.v.T - jnp.eye(16)
+    _, us_r = timeit(lambda: jax.block_until_ready(
+        ssop_apply_ref(h, ss.u, w)), repeats=3)
+    emit("kernel_ssop", us_k, f"ref_us={us_r:.1f}")
+
+    x = jax.random.normal(key, (256, 512))
+    wte = jax.random.normal(key, (512, 512)) * 0.05
+    a = jax.random.normal(key, (512, 16)) * 0.05
+    b = jax.random.normal(key, (16, 512)) * 0.05
+    _, us_k = timeit(lambda: jax.block_until_ready(
+        lora_ops.lora_matmul(x, wte, a, b, 2.0)), repeats=3)
+    _, us_r = timeit(lambda: jax.block_until_ready(
+        lora_matmul_ref(x, wte, a, b, 2.0)), repeats=3)
+    emit("kernel_lora_matmul", us_k, f"ref_us={us_r:.1f}")
+
+
+if __name__ == "__main__":
+    run()

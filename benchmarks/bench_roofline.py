@@ -1,0 +1,32 @@
+"""Roofline summary over saved dry-run artifacts (EXPERIMENTS.md §Roofline
+source data): per (arch x shape), the three terms and the dominant one."""
+import glob
+import os
+
+from benchmarks.common import emit
+from repro.analysis.roofline import load_record, roofline_terms
+
+RUNS = os.path.join(os.path.dirname(__file__), "..", "runs", "dryrun")
+
+
+def run(mesh="pod256"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(RUNS, "*.json"))):
+        rec = load_record(path)
+        if not rec or rec.get("mesh") != mesh or rec.get("tag"):
+            continue
+        if rec["status"] != "ok":
+            emit(f"roofline_{rec['arch']}_{rec['shape']}", 0.0,
+                 rec["status"])
+            continue
+        t = roofline_terms(rec)
+        emit(f"roofline_{rec['arch']}_{rec['shape']}", 0.0,
+             f"compute_s={t['compute_s']:.3f} memory_s={t['memory_s']:.3f} "
+             f"collective_s={t['collective_s']:.3f} dom={t['dominant']} "
+             f"6ND/HLO={t['useful_ratio']:.3f}")
+        rows.append((rec["arch"], rec["shape"], t))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

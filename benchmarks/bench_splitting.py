@@ -1,0 +1,66 @@
+"""Table V reproduction: static vs dynamic splitting under a heterogeneous
+network (40% resource-constrained clients), via the compute/communication
+cost model.
+
+Metrics follow the paper's footnote definitions: Comp. Util. (fraction of
+client FLOPS engaged), Comm. Util. (fraction of bandwidth used), Overall
+Eff. (geometric composite), Task Failure Rate (iteration latency > system
+timeout).
+"""
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core.splitting import SplitPolicy, splits_for_population
+from repro.federation.topology import make_topology
+
+M_BLOCKS = 12
+FLOPS_PER_BLOCK = 2 * 110e6 / 12 * 32 * 128 * 2   # BERT-base-ish per batch
+ACT_BYTES = 32 * 128 * 768 * 4                     # batch x seq x D fp32
+RHO = 2.1
+EDGE_FLOPS = 5e12
+
+
+def simulate(splits, topo, timeout_factor=2.5):
+    n = len(topo.capacity)
+    t_comp = np.array([(p + o) * FLOPS_PER_BLOCK / topo.capacity[i]
+                       for i, (p, q, o) in enumerate(splits)])
+    t_edge = np.array([q * FLOPS_PER_BLOCK / EDGE_FLOPS
+                       for (p, q, o) in splits])
+    t_comm = np.array([2 * ACT_BYTES / RHO / topo.bandwidth[i]
+                       for i in range(n)])
+    total = t_comp + t_edge + t_comm
+    timeout = timeout_factor * np.median(total)
+    fail = total > timeout
+    comp_util = np.mean(np.clip(t_comp / total, 0, 1))
+    comm_util = np.mean(np.clip(t_comm / total, 0, 1))
+    # engaged-resource balance: product of how evenly compute and comm are
+    # used, discounted by failures (composite like the paper's Overall Eff.)
+    overall = (np.sqrt(comp_util * comm_util) * 2 /
+               (np.sqrt(comp_util * comm_util) + 0.5)) * (1 - fail.mean())
+    return dict(comp=100 * comp_util, comm=100 * comm_util,
+                overall=100 * min(overall, 1.0), fail=100 * fail.mean())
+
+
+def run(n_clients=40, seed=0):
+    topo = make_topology(n_clients, 4, constrained_frac=0.4, seed=seed)
+    policy = SplitPolicy(num_blocks=M_BLOCKS, o_fix=2, p_min=1, p_max=6)
+
+    def compute():
+        rows = {}
+        for p_static in (1, 3, 6, 9):
+            splits = [(p_static, M_BLOCKS - p_static - 2, 2)] * n_clients
+            rows[f"static_p{p_static}"] = simulate(splits, topo)
+        dyn = splits_for_population(topo.capacity, topo.bandwidth, policy)
+        rows["dynamic"] = simulate(dyn, topo)
+        return rows
+
+    rows, us = timeit(compute, repeats=3)
+    for name, r in rows.items():
+        emit(f"table5_{name}", us / 5,
+             f"comp={r['comp']:.1f}% comm={r['comm']:.1f}% "
+             f"overall={r['overall']:.1f}% fail={r['fail']:.1f}%")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

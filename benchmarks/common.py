@@ -1,0 +1,16 @@
+"""Shared benchmark helpers: timing + CSV emission."""
+import time
+
+
+def timeit(fn, *args, repeats=3, warmup=1, **kw):
+    for _ in range(warmup):
+        fn(*args, **kw)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeats
+    return out, dt * 1e6  # us
+
+
+def emit(name: str, us_per_call: float, derived):
+    print(f"{name},{us_per_call:.1f},{derived}")

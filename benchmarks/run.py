@@ -1,0 +1,38 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+"""Benchmark harness: python -m benchmarks.run [--only NAME]"""
+import argparse
+import sys
+import time
+
+BENCHES = [
+    ("fig2_clustering", "benchmarks.bench_clustering"),
+    ("table2_accuracy", "benchmarks.bench_accuracy"),
+    ("table3_comm_time", "benchmarks.bench_comm_time"),
+    ("table4_compression", "benchmarks.bench_compression"),
+    ("table5_splitting", "benchmarks.bench_splitting"),
+    ("table6_privacy", "benchmarks.bench_privacy"),
+    ("kernels", "benchmarks.bench_kernels"),
+    ("roofline", "benchmarks.bench_roofline"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for name, module in BENCHES:
+        if args.only and args.only not in name:
+            continue
+        mod = __import__(module, fromlist=["run"])
+        try:
+            mod.run()
+        except Exception as e:  # noqa: BLE001
+            print(f"{name},0.0,ERROR:{type(e).__name__}:{e}", file=sys.stderr)
+            print(f"{name},0.0,ERROR:{type(e).__name__}")
+    print(f"# total {time.time()-t0:.1f}s")
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,88 @@
+"""Top-contributor breakdown over a dry-run HLO artifact: which
+instructions (x loop trip multipliers) dominate flops / bytes / wire.
+
+Usage: PYTHONPATH=src python -m repro.analysis.breakdown <record-name> [--top 15]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+from collections import defaultdict
+
+import zstandard
+
+from repro.analysis import hlo_cost as H
+
+RUNS = os.path.join(os.path.dirname(__file__), "..", "..", "..", "runs",
+                    "dryrun")
+
+
+def breakdown(text: str):
+    mc = H.ModuleCost(text)
+    rows = []
+
+    def walk(comp_name: str, mult: float, bytes_visible: bool):
+        comp = mc.comps.get(comp_name)
+        if comp is None:
+            return
+        for ins in comp.instrs:
+            op = ins.opcode
+            if op == "while":
+                body = H._CALL_ATTR.search(ins.attrs)
+                cond = H._COND_ATTR.search(ins.attrs)
+                trips = H._trip_count(mc.comps, cond.group(1)) if cond else 1
+                if body:
+                    walk(body.group(1), mult * trips, True)
+                continue
+            if op in ("fusion", "call"):
+                called = H._CALL_ATTR.search(ins.attrs)
+                if called:
+                    walk(called.group(1), mult, False)
+                if bytes_visible:
+                    if op == "fusion" and called:
+                        b = mc._fusion_bytes(ins, comp, called.group(1))
+                    else:
+                        b = mc._operand_bytes(ins, comp)
+                    meta = re.search(r'op_name="([^"]+)"', ins.raw)
+                    rows.append((b * mult, 0.0, 0.0,
+                                 meta.group(1)[-90:] if meta else ins.name,
+                                 ins.result_shape[:40], mult))
+                continue
+            c = mc._instr_cost(ins, comp, bytes_visible)
+            if c.flops or c.bytes or c.collective_bytes:
+                meta = re.search(r'op_name="([^"]+)"', ins.raw)
+                rows.append((c.bytes * mult, c.flops * mult,
+                             c.total_collective_bytes * mult,
+                             meta.group(1)[-90:] if meta else ins.name,
+                             ins.result_shape[:40], mult))
+
+    walk(mc.entry, 1.0, True)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("record")
+    ap.add_argument("--top", type=int, default=15)
+    ap.add_argument("--by", choices=["bytes", "flops", "wire"],
+                    default="bytes")
+    args = ap.parse_args()
+    path = os.path.join(RUNS, args.record + ".hlo.zst")
+    text = zstandard.ZstdDecompressor().decompress(
+        open(path, "rb").read(), max_output_size=1 << 31).decode()
+    rows = breakdown(text)
+    key = {"bytes": 0, "flops": 1, "wire": 2}[args.by]
+    rows.sort(key=lambda r: -r[key])
+    total = sum(r[key] for r in rows)
+    print(f"total {args.by}: {total:.3e}")
+    shown = 0.0
+    for r in rows[:args.top]:
+        shown += r[key]
+        print(f"{r[key]:.3e} ({r[key]/max(total,1e-9)*100:5.1f}%) x{r[5]:<6.0f}"
+              f" {r[4]:40s} {r[3]}")
+    print(f"(top {args.top} = {shown/max(total,1e-9)*100:.1f}%)")
+
+
+if __name__ == "__main__":
+    main()

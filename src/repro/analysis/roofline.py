@@ -1,0 +1,185 @@
+"""Roofline analysis over dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch × shape × mesh):
+  compute term    = flops_per_chip / 197e12          [s]   (bf16 peak, v5e)
+  memory term     = hbm_bytes_per_chip / 819e9       [s]
+  collective term = wire_bytes_per_chip / 50e9       [s]   (ICI per link)
+
+flops / bytes / wire-bytes come from the loop-aware HLO parser
+(repro.analysis.hlo_cost); XLA's cost_analysis is recorded alongside for
+reference (it under-counts while-loop bodies).
+
+MODEL_FLOPS uses the 6·N·D convention (2·N·D forward-only for prefill;
+2·N_active·B per decoded token), N excluding embedding/vocab tables and
+counting only the active expert fraction for MoE.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, Optional
+
+import numpy as np
+import zstandard
+
+from repro.analysis.hlo_cost import analyze, Cost
+from repro.configs import get_config
+from repro.configs.base import INPUT_SHAPES
+from repro.models import zoo
+from repro.models.params import Spec, is_spec
+
+PEAK_FLOPS = 197e12      # bf16 / chip (v5e)
+HBM_BW = 819e9           # bytes/s / chip
+ICI_BW = 50e9            # bytes/s / link
+
+
+def active_params(cfg) -> float:
+    """Parameter count excluding vocab tables; MoE experts scaled by the
+    routed fraction (top-k / E); shared experts fully counted."""
+    import jax
+    specs = zoo.get_model(cfg).specs(cfg)
+    total = 0.0
+    frac = 1.0
+    if cfg.moe:
+        frac = cfg.moe.experts_per_token / cfg.moe.num_experts
+
+    def visit(path, node):
+        nonlocal total
+        if is_spec(node):
+            if "vocab" in (node.axes or ()):
+                return
+            n = float(np.prod(node.shape))
+            if "experts" in (node.axes or ()):
+                n *= frac
+            total += n
+            return
+        if isinstance(node, dict):
+            for k, v in node.items():
+                visit(path + (k,), v)
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                visit(path + (str(i),), v)
+
+    visit((), specs)
+    return total
+
+
+def model_flops(cfg, shape) -> float:
+    n = active_params(cfg)
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch          # decode: 1 token
+
+
+def load_record(json_path: str) -> Optional[Dict]:
+    with open(json_path) as f:
+        rec = json.load(f)
+    if rec.get("status") != "ok":
+        return rec
+    hlo_path = json_path.replace(".json", ".hlo.zst")
+    if os.path.exists(hlo_path):
+        with open(hlo_path, "rb") as f:
+            text = zstandard.ZstdDecompressor().decompress(
+                f.read(), max_output_size=1 << 31).decode()
+        cost = analyze(text)
+        rec["parsed"] = {
+            "flops_per_chip": cost.flops,
+            "bytes_per_chip": cost.bytes,
+            "collectives": dict(cost.collective_bytes),
+            "wire_bytes_per_chip": cost.total_collective_bytes,
+        }
+    return rec
+
+
+def roofline_terms(rec: Dict) -> Optional[Dict]:
+    if rec.get("status") != "ok" or "parsed" not in rec:
+        return None
+    p = rec["parsed"]
+    cfg = get_config(rec["arch"])
+    shape = INPUT_SHAPES[rec["shape"]]
+    chips = rec["chips"]
+    t_c = p["flops_per_chip"] / PEAK_FLOPS
+    t_m = p["bytes_per_chip"] / HBM_BW
+    t_n = p["wire_bytes_per_chip"] / ICI_BW
+    dominant = max((("compute", t_c), ("memory", t_m), ("collective", t_n)),
+                   key=lambda x: x[1])[0]
+    mf = model_flops(cfg, shape)
+    hlo_global = p["flops_per_chip"] * chips
+    return {
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_n,
+        "dominant": dominant,
+        "model_flops": mf,
+        "useful_ratio": mf / hlo_global if hlo_global else 0.0,
+        "step_s": max(t_c, t_m, t_n),
+    }
+
+
+_SUGGEST = {
+    "compute": ("compute-bound: raise MXU utilization (larger tiles, bf16 "
+                "throughout) or cut redundant recompute (remat policy)"),
+    "memory": ("HBM-bound: shrink the working set (fuse the channel ops, "
+               "smaller attention chunks, bf16 intermediates) or raise "
+               "arithmetic intensity per pass"),
+    "collective": ("ICI-bound: reshard to cut cross-slice traffic (delayed "
+                   "pod sync for LoRA, expert-parallel all-to-all instead "
+                   "of replicated experts, overlap collectives with "
+                   "compute)"),
+}
+
+
+def make_table(records, *, mesh_filter="pod256", tag_filter="") -> str:
+    rows = []
+    for rec in records:
+        if rec.get("mesh") != mesh_filter or rec.get("tag", "") != tag_filter:
+            continue
+        arch, shape = rec["arch"], rec["shape"]
+        if rec["status"] == "skipped":
+            rows.append(f"| {arch} | {shape} | skipped | — | — | — | — | — | "
+                        f"{rec['reason'][:60]} |")
+            continue
+        t = roofline_terms(rec)
+        if t is None:
+            rows.append(f"| {arch} | {shape} | {rec['status']} | | | | | | |")
+            continue
+        rows.append(
+            f"| {arch} | {shape} | ok | {t['compute_s']*1e3:.2f} | "
+            f"{t['memory_s']*1e3:.2f} | {t['collective_s']*1e3:.2f} | "
+            f"**{t['dominant']}** | {t['useful_ratio']:.2f} | "
+            f"{_SUGGEST[t['dominant']][:80]}… |")
+    header = ("| arch | shape | status | compute (ms) | memory (ms) | "
+              "collective (ms) | dominant | 6ND/HLO | next lever |\n"
+              "|---|---|---|---|---|---|---|---|---|")
+    return header + "\n" + "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=os.path.join(
+        os.path.dirname(__file__), "..", "..", "..", "runs", "dryrun"))
+    ap.add_argument("--mesh", default="pod256")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args()
+
+    records = []
+    for path in sorted(glob.glob(os.path.join(args.dir, "*.json"))):
+        rec = load_record(path)
+        if rec:
+            t = roofline_terms(rec)
+            if t:
+                rec["roofline"] = t
+            records.append(rec)
+    print(make_table(records, mesh_filter=args.mesh, tag_filter=args.tag))
+    if args.json_out:
+        slim = [{k: v for k, v in r.items() if k != "traceback"}
+                for r in records]
+        with open(args.json_out, "w") as f:
+            json.dump(slim, f, indent=2, default=float)
+
+
+if __name__ == "__main__":
+    main()

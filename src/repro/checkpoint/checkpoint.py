@@ -1,0 +1,79 @@
+"""Msgpack pytree checkpointing (atomic writes, dtype/shape preserved)."""
+from __future__ import annotations
+
+import os
+import tempfile
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import ml_dtypes  # noqa: F401 — registers bfloat16 with numpy
+import msgpack
+import numpy as np
+
+
+def _encode_leaf(x):
+    arr = np.asarray(x)
+    # dtype.name keeps extended types (bfloat16 via ml_dtypes) restorable;
+    # dtype.str would give opaque '|V2'
+    return {b"__nd__": True,
+            b"dtype": arr.dtype.name.encode(),
+            b"shape": list(arr.shape),
+            b"data": arr.tobytes()}
+
+
+def _is_encoded(obj):
+    return isinstance(obj, dict) and obj.get(b"__nd__", False)
+
+
+def _decode_leaf(obj):
+    arr = np.frombuffer(obj[b"data"], dtype=np.dtype(obj[b"dtype"].decode()))
+    return jnp.asarray(arr.reshape(obj[b"shape"]))
+
+
+def _to_wire(tree):
+    if isinstance(tree, dict):
+        return {k: _to_wire(v) for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        return [_to_wire(v) for v in tree]
+    return _encode_leaf(tree)
+
+
+def _from_wire(obj):
+    if _is_encoded(obj):
+        return _decode_leaf(obj)
+    if isinstance(obj, dict):
+        return {(k.decode() if isinstance(k, bytes) else k): _from_wire(v)
+                for k, v in obj.items()}
+    if isinstance(obj, list):
+        return [_from_wire(v) for v in obj]
+    return obj
+
+
+def save(path: str, tree: Any) -> None:
+    payload = msgpack.packb(_to_wire(tree), use_bin_type=True)
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=d)
+    try:
+        with os.fdopen(fd, "wb") as f:
+            f.write(payload)
+        os.replace(tmp, path)
+    except BaseException:
+        os.unlink(tmp)
+        raise
+
+
+def restore(path: str) -> Any:
+    with open(path, "rb") as f:
+        return _from_wire(msgpack.unpackb(f.read(), raw=True))
+
+
+def save_state(path: str, *, params=None, opt_state=None,
+               step: int = 0, extra: Dict = None) -> None:
+    save(path, {"params": params, "opt_state": opt_state,
+                "step": np.asarray(step), "extra": extra or {}})
+
+
+def restore_state(path: str):
+    return restore(path)

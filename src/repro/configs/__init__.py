@@ -1,0 +1,41 @@
+"""Config registry: public ``--arch`` ids -> ArchConfig."""
+from __future__ import annotations
+
+from repro.configs.base import ArchConfig, InputShape, INPUT_SHAPES  # noqa: F401
+
+from repro.configs import (  # noqa: E402
+    xlstm_1_3b,
+    llama_3_2_vision_90b,
+    whisper_small,
+    llama3_8b,
+    grok_1_314b,
+    qwen2_5_3b,
+    olmo_1b,
+    qwen1_5_4b,
+    deepseek_v2_236b,
+    jamba_v0_1_52b,
+    bert_base,
+)
+
+REGISTRY = {
+    "xlstm-1.3b": xlstm_1_3b.CONFIG,
+    "llama-3.2-vision-90b": llama_3_2_vision_90b.CONFIG,
+    "whisper-small": whisper_small.CONFIG,
+    "llama3-8b": llama3_8b.CONFIG,
+    "grok-1-314b": grok_1_314b.CONFIG,
+    "qwen2.5-3b": qwen2_5_3b.CONFIG,
+    "olmo-1b": olmo_1b.CONFIG,
+    "qwen1.5-4b": qwen1_5_4b.CONFIG,
+    "deepseek-v2-236b": deepseek_v2_236b.CONFIG,
+    "jamba-v0.1-52b": jamba_v0_1_52b.CONFIG,
+    # the paper's own model
+    "bert-base": bert_base.CONFIG,
+}
+
+ASSIGNED = [k for k in REGISTRY if k != "bert-base"]
+
+
+def get_config(arch: str) -> ArchConfig:
+    if arch not in REGISTRY:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(REGISTRY)}")
+    return REGISTRY[arch]

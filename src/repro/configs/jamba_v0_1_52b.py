@@ -1,0 +1,25 @@
+"""Jamba-v0.1-52B [arXiv:2403.19887] — Mamba + attention 1:7 hybrid with MoE.
+
+32 layers, d_model=4096, 32 heads (GQA kv=8) on the attention layers,
+d_ff=14336, vocab=65536; MoE (16 experts top-2) on every other layer.
+Attention appears once per 8 layers (1:7 interleave).  Mamba layers give
+O(1)-state decode => long_500k runs.
+"""
+from repro.configs.base import ArchConfig, MoEConfig, SSMConfig
+
+CONFIG = ArchConfig(
+    name="jamba-v0.1-52b",
+    family="hybrid",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=14336,
+    vocab_size=65536,
+    attn_every=8,
+    moe=MoEConfig(num_experts=16, experts_per_token=2, expert_d_ff=14336,
+                  every=2, capacity_factor=1.25),
+    ssm=SSMConfig(d_state=16, d_conv=4, expand=2, chunk=128),
+    supports_long_context=True,
+    source="arXiv:2403.19887 (Jamba)",
+)

@@ -1,0 +1,24 @@
+"""Llama-3.2-Vision-90B [hf:meta-llama/Llama-3.2-11B-Vision, scaled per
+assignment] — decoder with cross-attention image layers every 5th block.
+
+100 layers, d_model=8192, 64 heads (GQA kv=8), d_ff=28672, vocab=128256.
+The vision tower (ViT + projector) is a STUB per the assignment carve-out:
+``input_specs`` provides pre-computed patch embeddings (B, 1024, d_model).
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llama-3.2-vision-90b",
+    family="vlm",
+    num_layers=100,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=28672,
+    vocab_size=128256,
+    rope_theta=500_000.0,
+    cross_attn_every=5,
+    num_vision_tokens=1024,
+    supports_long_context=False,  # full attention; long_500k skipped (DESIGN.md §4)
+    source="hf:meta-llama/Llama-3.2-11B-Vision (arch pattern), 90B scale per assignment",
+)

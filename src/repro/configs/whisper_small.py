@@ -1,0 +1,28 @@
+"""Whisper-small [arXiv:2212.04356] — encoder-decoder audio backbone.
+
+12 encoder + 12 decoder layers, d_model=768, 12 heads, d_ff=3072,
+vocab=51865.  The mel-spectrogram + conv feature extractor is a STUB per the
+assignment carve-out: ``input_specs`` provides frame embeddings
+(B, 1500, d_model).  LayerNorm + GELU, learned positions, full attention in
+the decoder => long_500k skipped (DESIGN.md §4).
+"""
+from repro.configs.base import ArchConfig, LoRAConfig
+
+CONFIG = ArchConfig(
+    name="whisper-small",
+    family="audio",
+    num_layers=12,           # decoder layers
+    encoder_layers=12,
+    d_model=768,
+    num_heads=12,
+    num_kv_heads=12,
+    d_ff=3072,
+    vocab_size=51865,
+    norm="layernorm",
+    act="gelu",
+    max_position_embeddings=448 * 80,  # generous learned-position table
+    num_audio_frames=1500,
+    lora=LoRAConfig(rank=16, alpha=32.0, targets=("q", "v")),
+    supports_long_context=False,
+    source="arXiv:2212.04356 (Whisper), small configuration",
+)

@@ -1,0 +1,25 @@
+"""xLSTM-1.3B [arXiv:2405.04517] — sLSTM + mLSTM blocks, attention-free.
+
+48 blocks, d_model=2048, 4 heads (head_dim 512), no separate FFN (d_ff=0):
+the mLSTM block carries its own 2x up-projection.  xLSTM[7:1] ratio — one
+sLSTM block per 8.
+"""
+from repro.configs.base import ArchConfig, SSMConfig, LoRAConfig
+
+CONFIG = ArchConfig(
+    name="xlstm-1.3b",
+    family="ssm",
+    num_layers=48,
+    d_model=2048,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=0,
+    vocab_size=50304,
+    head_dim=512,
+    norm="layernorm",
+    act="gelu",
+    ssm=SSMConfig(slstm_every=8, proj_factor=2.0, conv_kernel=4, chunk=128),
+    lora=LoRAConfig(rank=16, alpha=32.0, targets=("q", "k", "v")),
+    supports_long_context=True,   # recurrent state: O(1) per decoded token
+    source="arXiv:2405.04517 (xLSTM), 1.3B configuration",
+)

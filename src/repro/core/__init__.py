@@ -1,0 +1,12 @@
+"""ELSA core: the paper's contribution as composable JAX modules.
+
+- fingerprint:     behavioral Gaussian fingerprints + symmetric KLD (Eqs. 4-6)
+- trust:           prediction-consistency trust scores
+- clustering:      latency-feasible trust-weighted spectral clustering (Stages 1-4)
+- splitting:       resource-aware dynamic tripartite splits (Eqs. 7-9)
+- ssop:            semantic-subspace orthogonal perturbation (Eqs. 17-19)
+- sketch:          count-sketch activation compression (Eqs. 20-21)
+- split_training:  tripartite split train step with the SS-OP∘sketch channel
+- aggregation:     edge FedAvg + cloud coherence/trust fusion (Eqs. 14-16)
+- comm_model:      communication volume/latency model (Eqs. 22-24)
+"""

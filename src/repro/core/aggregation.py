@@ -1,0 +1,59 @@
+"""Edge- and cloud-level aggregation (ELSA §III.B.2, Eqs. 14–16)."""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def fedavg(trees: Sequence, weights: Sequence[float]):
+    """Weighted average of parameter pytrees."""
+    if not trees:
+        raise ValueError("fedavg: no trees to aggregate")
+    w = np.asarray(weights, np.float32)
+    w = w / max(w.sum(), 1e-12)
+    def avg(*leaves):
+        out = leaves[0] * w[0]
+        for wi, leaf in zip(w[1:], leaves[1:]):
+            out = out + wi * leaf
+        return out
+    return jax.tree_util.tree_map(avg, *trees)
+
+
+def edge_weight(mean_pairwise_kld: float, mean_trust: float) -> float:
+    """Eq. 14: alpha_k = (1 / (1 + R̄_k)) * w̄_k^trust."""
+    return (1.0 / (1.0 + mean_pairwise_kld)) * mean_trust
+
+
+def mean_pairwise_kld(div: np.ndarray, members: List[int]) -> float:
+    """R̄_k over a client group (Eq. 14's coherence term)."""
+    if len(members) < 2:
+        return 0.0
+    sub = div[np.ix_(members, members)]
+    n = len(members)
+    return float(sub.sum() / (n * (n - 1)))
+
+
+def cloud_aggregate(edge_params: Dict[int, object],
+                    alphas: Dict[int, float]):
+    """Eq. 15: theta_g = sum_k alpha~_k theta_{g,k}."""
+    ks = sorted(edge_params)
+    weights = [max(alphas[k], 0.0) for k in ks]
+    return fedavg([edge_params[k] for k in ks], weights)
+
+
+def converged(theta_new, theta_old, xi: float) -> bool:
+    """Eq. 16: ||theta_g - theta_{g-1}||_2 <= xi."""
+    sq = sum(float(jnp.sum((a - b).astype(jnp.float32) ** 2))
+             for a, b in zip(jax.tree_util.tree_leaves(theta_new),
+                             jax.tree_util.tree_leaves(theta_old)))
+    return float(np.sqrt(sq)) <= xi
+
+
+def global_delta(theta_new, theta_old) -> float:
+    sq = sum(float(jnp.sum((a - b).astype(jnp.float32) ** 2))
+             for a, b in zip(jax.tree_util.tree_leaves(theta_new),
+                             jax.tree_util.tree_leaves(theta_old)))
+    return float(np.sqrt(sq))

@@ -1,0 +1,41 @@
+"""Communication volume / latency model (ELSA §III.B.4, Eqs. 22–24)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class CommConfig:
+    t_rounds: int            # t: client-edge rounds per global aggregation
+    bytes_per_param: float   # zeta (4 for fp32)
+    seq_len: int             # mu: tokens per input
+    d_hidden: int            # D^hidden
+    rho: float               # sketch compression ratio
+    lora_bytes: int          # |theta^LoRA| per edge->cloud upload
+
+
+def round_volume_bytes(cc: CommConfig, batch_sizes_per_edge: Dict[int, List[float]],
+                       n_edges: int) -> float:
+    """Eq. 22: C_g = 2 t ζ μ D / ρ * Σ_k Σ_n B_n  +  K |θ_LoRA|."""
+    total_b = sum(sum(bs) for bs in batch_sizes_per_edge.values())
+    activ = 2.0 * cc.t_rounds * cc.bytes_per_param * cc.seq_len \
+        * cc.d_hidden / cc.rho * total_b
+    return activ + n_edges * cc.lora_bytes
+
+
+def client_comm_time(cc: CommConfig, batch_size: float,
+                     bandwidth_bytes_per_s: float) -> float:
+    """Eq. 23: T_{g,n} = 2 t B_n μ ζ D / ρ / B_n^bw."""
+    vol = 2.0 * cc.t_rounds * batch_size * cc.seq_len \
+        * cc.bytes_per_param * cc.d_hidden / cc.rho
+    return vol / max(bandwidth_bytes_per_s, 1e-9)
+
+
+def total_comm_time(cc: CommConfig, batch_sizes: Sequence[float],
+                    bandwidths: Sequence[float], n_global_rounds: int
+                    ) -> float:
+    """Eq. 24: T ≈ G * max_n T_{g,n} (the straggler bound)."""
+    per_client = [client_comm_time(cc, b, bw)
+                  for b, bw in zip(batch_sizes, bandwidths)]
+    return n_global_rounds * max(per_client)

@@ -1,0 +1,74 @@
+"""Behavioral fingerprints (ELSA §III.B.1, Eqs. 4–6).
+
+Each client's behavior on the public probe set is summarized as a
+multivariate Gaussian over its pooled hidden representations
+(``[CLS]`` for encoders; pooled final hidden state for decoder-only /
+SSM architectures — see DESIGN.md §8).  Pairwise behavioral discrepancy
+is the symmetrized KL divergence between those Gaussians.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Fingerprint(NamedTuple):
+    mu: jnp.ndarray      # (D,)
+    sigma: jnp.ndarray   # (D, D)
+
+
+def fingerprint(embeddings: jnp.ndarray, ridge: float = 1e-3) -> Fingerprint:
+    """Eq. 4: R_n = N(mu_n, Sigma_n) from probe embeddings (Q, D).
+
+    A ridge term keeps Sigma positive-definite when Q < D (the paper's
+    Q=100 << D=768 regime necessarily yields a rank-deficient MLE).
+    """
+    embeddings = embeddings.astype(jnp.float32)
+    q, d = embeddings.shape
+    mu = embeddings.mean(0)
+    centered = embeddings - mu
+    sigma = (centered.T @ centered) / q + ridge * jnp.eye(d, dtype=jnp.float32)
+    return Fingerprint(mu, sigma)
+
+
+def kl_gaussian(a: Fingerprint, b: Fingerprint) -> jnp.ndarray:
+    """Eq. 6: closed-form KL(N_a || N_b), via Cholesky for stability."""
+    d = a.mu.shape[0]
+    lb = jnp.linalg.cholesky(b.sigma)
+    la = jnp.linalg.cholesky(a.sigma)
+    # tr(Sigma_b^-1 Sigma_a) = ||Lb^-1 La||_F^2
+    m = jax.scipy.linalg.solve_triangular(lb, la, lower=True)
+    tr = jnp.sum(m * m)
+    diff = b.mu - a.mu
+    y = jax.scipy.linalg.solve_triangular(lb, diff, lower=True)
+    maha = jnp.sum(y * y)
+    logdet = 2.0 * (jnp.sum(jnp.log(jnp.diagonal(lb)))
+                    - jnp.sum(jnp.log(jnp.diagonal(la))))
+    return 0.5 * (tr - d + logdet + maha)
+
+
+def sym_kl(a: Fingerprint, b: Fingerprint) -> jnp.ndarray:
+    """Eq. 5: R(n, n') = KL(a||b) + KL(b||a)."""
+    return kl_gaussian(a, b) + kl_gaussian(b, a)
+
+
+def divergence_matrix(fps: Sequence[Fingerprint]) -> np.ndarray:
+    """Dense (N, N) symmetric KLD matrix (host-side; N is small)."""
+    n = len(fps)
+    out = np.zeros((n, n), np.float64)
+    for i in range(n):
+        for j in range(i + 1, n):
+            v = float(sym_kl(fps[i], fps[j]))
+            out[i, j] = out[j, i] = v
+    return out
+
+
+def pooled_embedding(hidden: jnp.ndarray, family: str) -> jnp.ndarray:
+    """Task-agnostic per-input profile: [CLS] for encoders, mean-pool
+    otherwise (DESIGN.md §8)."""
+    if family == "encoder":
+        return hidden[:, 0, :]
+    return hidden.mean(axis=1)

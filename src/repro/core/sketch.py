@@ -1,0 +1,112 @@
+"""Count-sketch compression of hidden activations (ELSA §III.B.3,
+Eqs. 20–21): Y pairwise-independent (bucket, sign) hash rows, Z buckets,
+median-of-Y decoding.  Compression ratio rho = D / (Y*Z).
+
+TPU adaptation (DESIGN.md §3): the hash scatter is re-expressed as a
+signed-selection matmul — ``sketch[y] = H @ S_y`` with
+``S_y ∈ {-1,0,+1}^{D×Z}`` — so compression runs on the MXU; decompression
+is the transposed gather + median.  Both forms are provided (scatter for
+CPU-exactness tests, matmul for the compiled path / Pallas kernel) and are
+bit-identical in fp32.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class SketchPlan(NamedTuple):
+    bucket: jnp.ndarray    # (Y, D) int32 in [0, Z)
+    sign: jnp.ndarray      # (Y, D) float32 in {-1, +1}
+    z: int
+
+    @property
+    def y(self) -> int:
+        return self.bucket.shape[0]
+
+    @property
+    def d(self) -> int:
+        return self.bucket.shape[1]
+
+    @property
+    def rho(self) -> float:
+        """Compression ratio D / (Y Z)."""
+        return self.d / (self.y * self.z)
+
+
+def make_plan(d: int, y: int, z: int, seed: int = 0) -> SketchPlan:
+    rng = np.random.default_rng(seed)
+    bucket = rng.integers(0, z, size=(y, d), dtype=np.int32)
+    sign = rng.choice(np.array([-1.0, 1.0], np.float32), size=(y, d))
+    return SketchPlan(jnp.asarray(bucket), jnp.asarray(sign), z)
+
+
+def selection_matrices(plan: SketchPlan) -> jnp.ndarray:
+    """Dense signed-selection tensor S (Y, D, Z) for the MXU formulation."""
+    oh = jax.nn.one_hot(plan.bucket, plan.z, dtype=jnp.float32)  # (Y, D, Z)
+    return oh * plan.sign[..., None]
+
+
+def compress(h: jnp.ndarray, plan: SketchPlan, *, via_matmul: bool = True,
+             use_kernel: bool = False) -> jnp.ndarray:
+    """Eq. 20: h (..., D) -> sketch (..., Y, Z)."""
+    if use_kernel:
+        from repro.kernels.count_sketch import ops as kops
+        return kops.sketch_compress(h, plan)
+    hf = h.astype(jnp.float32)
+    if via_matmul:
+        s = selection_matrices(plan)                    # (Y, D, Z)
+        return jnp.einsum("...d,ydz->...yz", hf, s).astype(h.dtype)
+    # scatter-add reference (per hash row)
+    def one_row(yy):
+        contrib = jnp.moveaxis(hf * plan.sign[yy], -1, 0)    # (D, ...)
+        return jnp.moveaxis(
+            jax.ops.segment_sum(contrib, plan.bucket[yy],
+                                num_segments=plan.z), 0, -1)  # (..., Z)
+    rows = [one_row(yy) for yy in range(plan.y)]
+    return jnp.stack(rows, axis=-2).astype(h.dtype)
+
+
+def decompress(u: jnp.ndarray, plan: SketchPlan, *,
+               use_kernel: bool = False) -> jnp.ndarray:
+    """Eq. 21: sketch (..., Y, Z) -> estimate (..., D) via median of Y."""
+    if use_kernel:
+        from repro.kernels.count_sketch import ops as kops
+        return kops.sketch_decompress(u, plan)
+    uf = u.astype(jnp.float32)
+    # gather: est[y, d] = sign[y, d] * u[y, bucket[y, d]]
+    ests = []
+    for yy in range(plan.y):
+        ests.append(jnp.take(uf[..., yy, :], plan.bucket[yy], axis=-1)
+                    * plan.sign[yy])
+    est = jnp.stack(ests, axis=-2)                      # (..., Y, D)
+    return _median(est, axis=-2).astype(u.dtype)
+
+
+def _median(x: jnp.ndarray, axis: int) -> jnp.ndarray:
+    """Median via an elementwise compare-exchange network.
+
+    Y (the number of hash rows) is small (3–8), so an O(Y^2) min/max
+    bubble network is cheap, fully differentiable, and avoids
+    ``jnp.sort``/gather (whose VJP is broken in this jaxlib build).
+    """
+    rows = [jax.lax.index_in_dim(x, i, axis, keepdims=False)
+            for i in range(x.shape[axis])]
+    n = len(rows)
+    for i in range(n):
+        for j in range(n - 1 - i):
+            lo = jnp.minimum(rows[j], rows[j + 1])
+            hi = jnp.maximum(rows[j], rows[j + 1])
+            rows[j], rows[j + 1] = lo, hi
+    if n % 2:
+        return rows[(n - 1) // 2]
+    return 0.5 * (rows[n // 2 - 1] + rows[n // 2])
+
+
+def channel(h: jnp.ndarray, plan: SketchPlan, **kw) -> jnp.ndarray:
+    """compress -> decompress round trip (the lossy channel)."""
+    return decompress(compress(h, plan, **kw), plan, **{
+        k: v for k, v in kw.items() if k == "use_kernel"})

@@ -1,0 +1,101 @@
+"""Tripartite split training (ELSA §III.B.2–3).
+
+The model stack is cut at (p, p+q): Part 1 (embedding + blocks[:p], client),
+Part 2 (blocks[p:p+q], edge), Part 3 (blocks[p+q:] + head, client).
+Activations crossing each cut pass through the ELSA channel
+(SS-OP -> count-sketch -> median-decode -> SS-OPᵀ).  The channel is a
+composition of linear maps, so JAX autodiff's VJP is exactly the paper's
+symmetric backward path (gradients compressed the same way, with Q_nᵀ
+restoring rotation exactly).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sketch import SketchPlan, compress, decompress
+from repro.core.ssop import SSOP, apply_ssop, apply_ssop_inverse
+from repro.models import bert as bert_mod
+from repro.models.zoo import classification_loss
+
+
+class Channel(NamedTuple):
+    """The client<->edge activation channel."""
+    ssop: Optional[SSOP]
+    plan: Optional[SketchPlan]
+
+    def __call__(self, h: jnp.ndarray) -> jnp.ndarray:
+        if self.ssop is not None:
+            h = apply_ssop(h, self.ssop)
+        if self.plan is not None:
+            h = decompress(compress(h, self.plan), self.plan)
+        if self.ssop is not None:
+            h = apply_ssop_inverse(h, self.ssop)
+        return h
+
+    def transmit(self, h: jnp.ndarray) -> jnp.ndarray:
+        """What actually crosses the network (privacy-attack surface)."""
+        if self.ssop is not None:
+            h = apply_ssop(h, self.ssop)
+        if self.plan is not None:
+            h = compress(h, self.plan)
+        return h
+
+
+IDENTITY_CHANNEL = Channel(None, None)
+
+
+@dataclasses.dataclass(frozen=True)
+class Split:
+    p: int
+    q: int
+    o: int
+
+
+def split_forward(cfg, frozen, lora, tokens, split: Split,
+                  channel: Channel = IDENTITY_CHANNEL,
+                  mask_valid=None):
+    """BERT split forward pass; returns (cls, logits, h_up, h_down)."""
+    x = bert_mod.embed(cfg, frozen, tokens)
+    # Part 1 (client)
+    h_up = bert_mod.run_blocks(cfg, frozen, lora, x, 0, split.p, mask_valid)
+    h_up_t = channel(h_up)
+    # Part 2 (edge)
+    h_down = bert_mod.run_blocks(cfg, frozen, lora, h_up_t,
+                                 split.p, split.p + split.q, mask_valid)
+    h_down_t = channel(h_down)
+    # Part 3 (client)
+    x = bert_mod.run_blocks(cfg, frozen, lora, h_down_t,
+                            split.p + split.q, cfg.num_layers, mask_valid)
+    cls = x[:, 0, :]
+    pooled = jnp.tanh(cls @ lora["pooler"]["w"].astype(cls.dtype)
+                      + lora["pooler"]["b"].astype(cls.dtype))
+    logits = pooled @ lora["head"]["w"].astype(cls.dtype) \
+        + lora["head"]["b"].astype(cls.dtype)
+    return cls, logits, h_up, h_down
+
+
+def split_loss(cfg, frozen, lora, batch, split: Split,
+               channel: Channel = IDENTITY_CHANNEL):
+    _, logits, _, _ = split_forward(cfg, frozen, lora, batch["tokens"],
+                                    split, channel,
+                                    batch.get("mask_valid"))
+    return classification_loss(logits, batch["labels"])
+
+
+def split_train_step(cfg, split: Split, channel: Channel, optimizer):
+    """Build a jittable (frozen, lora, opt_state, batch) -> ... step.
+
+    Gradients flow Part 3 -> channelᵀ -> Part 2 -> channelᵀ -> Part 1
+    automatically (the channel is linear).
+    """
+    def step(frozen, lora, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda lp: split_loss(cfg, frozen, lp, batch, split, channel)
+        )(lora)
+        lora_new, opt_state = optimizer.update(lora, grads, opt_state)
+        return lora_new, opt_state, loss
+    return step

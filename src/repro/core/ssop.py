@@ -1,0 +1,81 @@
+"""Semantic Subspace Orthogonal Perturbation (ELSA §III.B.3, Eqs. 17–19).
+
+``Q_n = U_n V_n U_nᵀ + (I - U_n U_nᵀ)`` rotates only inside the top-r
+semantic subspace U_n of recent hidden activations, with a client-secret
+orthogonal V_n (QR of a seeded Gaussian).  Q_n is orthogonal, so the
+backward pass restores exact gradients via Q_nᵀ.
+
+TPU adaptation (DESIGN.md §3): Q_n (D×D) is never materialized; we apply
+the fused low-rank form  ``H Q_nᵀ = H + (H U_n) (V_nᵀ - I) U_nᵀ`` —
+O(T·D·r) instead of O(T·D²).
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class SSOP(NamedTuple):
+    u: jnp.ndarray   # (D, r) orthonormal semantic basis
+    v: jnp.ndarray   # (r, r) secret orthogonal rotation
+
+
+def semantic_subspace(j_matrix: jnp.ndarray, r: int) -> jnp.ndarray:
+    """Eq. 17: top-r right singular vectors of J (Q, D) -> U (D, r)."""
+    j32 = j_matrix.astype(jnp.float32)
+    _, _, vt = jnp.linalg.svd(j32, full_matrices=False)
+    return vt[:r].T
+
+
+def client_seed(salt: str, client_id: int) -> int:
+    """seed_n = Hash(s || n) (Eq. 18)."""
+    h = hashlib.sha256(f"{salt}||{client_id}".encode()).digest()
+    return int.from_bytes(h[:8], "little")
+
+
+def random_orthogonal(r: int, seed: int) -> jnp.ndarray:
+    """Eq. 18: V_n = QR(Phi(n)), Phi ~ N(0,1) seeded."""
+    rng = np.random.default_rng(seed)
+    phi = rng.standard_normal((r, r))
+    q, rr = np.linalg.qr(phi)
+    # sign-fix so the decomposition is unique (det-stable)
+    q = q * np.sign(np.diagonal(rr))[None, :]
+    return jnp.asarray(q, jnp.float32)
+
+
+def make_ssop(j_matrix: jnp.ndarray, r: int, salt: str,
+              client_id: int) -> SSOP:
+    u = semantic_subspace(j_matrix, r)
+    v = random_orthogonal(r, client_seed(salt, client_id))
+    return SSOP(u=u, v=v)
+
+
+def apply_ssop(h: jnp.ndarray, ssop: SSOP, *, use_kernel: bool = False
+               ) -> jnp.ndarray:
+    """H -> H Q_nᵀ (rows are feature vectors).  Fused low-rank form."""
+    if use_kernel:
+        from repro.kernels.ssop import ops as kops
+        return kops.ssop_apply(h, ssop.u, ssop.v)
+    u = ssop.u.astype(h.dtype)
+    v = ssop.v.astype(h.dtype)
+    proj = h @ u                                       # (..., r)
+    return h + (proj @ (v.T - jnp.eye(v.shape[0], dtype=h.dtype))) @ u.T
+
+
+def apply_ssop_inverse(h: jnp.ndarray, ssop: SSOP) -> jnp.ndarray:
+    """H -> H Q_n (the exact inverse; Q orthogonal)."""
+    u = ssop.u.astype(h.dtype)
+    v = ssop.v.astype(h.dtype)
+    proj = h @ u
+    return h + (proj @ (v - jnp.eye(v.shape[0], dtype=h.dtype))) @ u.T
+
+
+def q_matrix(ssop: SSOP) -> jnp.ndarray:
+    """Explicit Q_n (tests only — O(D²))."""
+    d, r = ssop.u.shape
+    uu = ssop.u @ ssop.u.T
+    return ssop.u @ ssop.v @ ssop.u.T + jnp.eye(d, dtype=ssop.u.dtype) - uu

@@ -1,0 +1,5 @@
+from repro.data.synthetic import (SyntheticTaskConfig, make_task,
+                                  dirichlet_partition, quantity_skew,
+                                  poison_labels, ClientData)  # noqa: F401
+from repro.data.probe import make_probe_set  # noqa: F401
+from repro.data.pipeline import batch_iterator  # noqa: F401

@@ -1,0 +1,31 @@
+"""Batching / shuffling pipeline over client datasets."""
+from __future__ import annotations
+
+from typing import Iterator, Tuple
+
+import numpy as np
+
+
+def batch_iterator(tokens: np.ndarray, labels: np.ndarray, batch_size: int,
+                   *, shuffle: bool = True, seed: int = 0, drop_last: bool = False
+                   ) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
+    """Epoch iterator yielding (tokens, labels) batches."""
+    n = len(tokens)
+    rng = np.random.default_rng(seed)
+    idx = rng.permutation(n) if shuffle else np.arange(n)
+    stop = (n // batch_size) * batch_size if drop_last else n
+    for i in range(0, stop, batch_size):
+        sel = idx[i:i + batch_size]
+        if len(sel) == 0:
+            continue
+        yield tokens[sel], labels[sel]
+
+
+def infinite_batches(tokens: np.ndarray, labels: np.ndarray,
+                     batch_size: int, seed: int = 0):
+    epoch = 0
+    while True:
+        for b in batch_iterator(tokens, labels, batch_size,
+                                seed=seed + epoch):
+            yield b
+        epoch += 1

@@ -1,0 +1,1 @@
+from repro.federation.simulation import Federation, FedConfig  # noqa: F401

@@ -1,0 +1,107 @@
+"""Count-sketch compress/decompress Pallas TPU kernels (Eqs. 20–21).
+
+TPU adaptation (DESIGN.md §3): the hash scatter/gather is re-expressed as
+matmuls against a dense signed-selection tensor S (Y, D, Z), S[y,d,z] =
+sign[y,d]·1[bucket[y,d]=z], so both directions run on the MXU:
+
+  compress:   out[t,y,:]  = Σ_d H[t,d]·S[y,d,:]      (T,D)x(D,Z) per y
+  decompress: est[t,y,d]  = Σ_z U[t,y,z]·S[y,d,z]    (T,Z)x(Z,D) per y
+              out[t,d]    = median_y est[t,y,d]       (compare-exchange net)
+
+Blocks are (bt, bd) tiles with fp32 accumulation in VMEM scratch; the
+(y, z) extent is small (Y≈3, Z≈D/(ρY)) and stays resident.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _compress_kernel(h_ref, s_ref, o_ref, acc_ref, *, nd: int):
+    di = pl.program_id(2)
+
+    @pl.when(di == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    h = h_ref[...].astype(jnp.float32)            # (bt, bd)
+    s = s_ref[0].astype(jnp.float32)              # (bd, Z)
+    acc_ref[...] += jax.lax.dot(h, s, preferred_element_type=jnp.float32)
+
+    @pl.when(di == nd - 1)
+    def _finish():
+        o_ref[:, 0, :] = acc_ref[...].astype(o_ref.dtype)
+
+
+def sketch_compress_tz(h, s, *, bt: int = 256, bd: int = 512,
+                       interpret: bool = True):
+    """h: (T, D); s: (Y, D, Z) -> (T, Y, Z)."""
+    T, D = h.shape
+    Y, _, Z = s.shape
+    bt = min(bt, T)
+    bd = min(bd, D)
+    assert T % bt == 0 and D % bd == 0
+    nt, nd = T // bt, D // bd
+    kernel = functools.partial(_compress_kernel, nd=nd)
+    return pl.pallas_call(
+        kernel,
+        grid=(nt, Y, nd),
+        in_specs=[
+            pl.BlockSpec((bt, bd), lambda t, y, d: (t, d)),
+            pl.BlockSpec((1, bd, Z), lambda t, y, d: (y, d, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, 1, Z), lambda t, y, d: (t, y, 0)),
+        out_shape=jax.ShapeDtypeStruct((T, Y, Z), h.dtype),
+        scratch_shapes=[pltpu.VMEM((bt, Z), jnp.float32)],
+        interpret=interpret,
+    )(h, s)
+
+
+def _median_rows(rows):
+    n = len(rows)
+    rows = list(rows)
+    for i in range(n):
+        for j in range(n - 1 - i):
+            lo = jnp.minimum(rows[j], rows[j + 1])
+            hi = jnp.maximum(rows[j], rows[j + 1])
+            rows[j], rows[j + 1] = lo, hi
+    if n % 2:
+        return rows[(n - 1) // 2]
+    return 0.5 * (rows[n // 2 - 1] + rows[n // 2])
+
+
+def _decompress_kernel(u_ref, s_ref, o_ref, *, y: int):
+    u = u_ref[...].astype(jnp.float32)            # (bt, Y, Z)
+    ests = []
+    for yy in range(y):
+        s_y = s_ref[...][yy].astype(jnp.float32)  # (bd, Z)
+        ests.append(jax.lax.dot_general(
+            u[:, yy, :], s_y, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32))  # (bt, bd)
+    o_ref[...] = _median_rows(ests).astype(o_ref.dtype)
+
+
+def sketch_decompress_tz(u, s, *, bt: int = 256, bd: int = 512,
+                         interpret: bool = True):
+    """u: (T, Y, Z); s: (Y, D, Z) -> (T, D) median estimates."""
+    T, Y, Z = u.shape
+    _, D, _ = s.shape
+    bt = min(bt, T)
+    bd = min(bd, D)
+    assert T % bt == 0 and D % bd == 0
+    kernel = functools.partial(_decompress_kernel, y=Y)
+    return pl.pallas_call(
+        kernel,
+        grid=(T // bt, D // bd),
+        in_specs=[
+            pl.BlockSpec((bt, Y, Z), lambda t, d: (t, 0, 0)),
+            pl.BlockSpec((Y, bd, Z), lambda t, d: (0, d, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, bd), lambda t, d: (t, d)),
+        out_shape=jax.ShapeDtypeStruct((T, D), u.dtype),
+        interpret=interpret,
+    )(u, s)

@@ -1,0 +1,31 @@
+"""jit'd wrappers binding SketchPlans to the count-sketch kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sketch import SketchPlan, selection_matrices
+from repro.kernels.count_sketch.kernel import (sketch_compress_tz,
+                                               sketch_decompress_tz)
+
+
+def _flatten(h):
+    lead = h.shape[:-1]
+    return h.reshape(-1, h.shape[-1]), lead
+
+
+def sketch_compress(h, plan: SketchPlan, *, interpret: bool = True):
+    """h: (..., D) -> (..., Y, Z) via the Pallas MXU kernel."""
+    s = selection_matrices(plan)
+    flat, lead = _flatten(h)
+    out = sketch_compress_tz(flat, s, interpret=interpret)
+    return out.reshape(lead + (plan.y, plan.z))
+
+
+def sketch_decompress(u, plan: SketchPlan, *, interpret: bool = True):
+    """u: (..., Y, Z) -> (..., D)."""
+    s = selection_matrices(plan)
+    lead = u.shape[:-2]
+    flat = u.reshape(-1, plan.y, plan.z)
+    out = sketch_decompress_tz(flat, s, interpret=interpret)
+    return out.reshape(lead + (plan.d,))

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the count-sketch kernels."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def compress_ref(h, s):
+    """h: (T, D); s: (Y, D, Z) -> (T, Y, Z)."""
+    return jnp.einsum("td,ydz->tyz", h.astype(jnp.float32),
+                      s.astype(jnp.float32)).astype(h.dtype)
+
+
+def decompress_ref(u, s):
+    """u: (T, Y, Z); s: (Y, D, Z) -> (T, D) median-of-Y estimates."""
+    est = jnp.einsum("tyz,ydz->tyd", u.astype(jnp.float32),
+                     s.astype(jnp.float32))
+    # median over Y via sort-free compare-exchange (matches kernel exactly)
+    rows = [est[:, i, :] for i in range(est.shape[1])]
+    n = len(rows)
+    for i in range(n):
+        for j in range(n - 1 - i):
+            lo = jnp.minimum(rows[j], rows[j + 1])
+            hi = jnp.maximum(rows[j], rows[j + 1])
+            rows[j], rows[j + 1] = lo, hi
+    med = rows[(n - 1) // 2] if n % 2 else 0.5 * (rows[n // 2 - 1]
+                                                  + rows[n // 2])
+    return med.astype(u.dtype)

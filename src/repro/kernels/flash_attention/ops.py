@@ -1,0 +1,30 @@
+"""jit'd public wrapper for the flash attention kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "q_offset",
+                                   "kv_valid", "bq", "bk", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, q_offset=0,
+                    kv_valid=None, bq=512, bk=512, interpret=True):
+    """q: (B, Sq, H, Dh); k, v: (B, Sk, KV, Dh) -> (B, Sq, H, Dh).
+
+    Training/prefill path (q_offset=0, full cache valid); decode uses the
+    jnp online-softmax path in :mod:`repro.models.common`.
+    """
+    assert q_offset == 0 and kv_valid is None, \
+        "flash kernel covers the train/prefill path"
+    B, Sq, H, Dh = q.shape
+    _, Sk, KV, _ = k.shape
+    qr = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, Dh)
+    kr = k.transpose(0, 2, 1, 3).reshape(B * KV, Sk, Dh)
+    vr = v.transpose(0, 2, 1, 3).reshape(B * KV, Sk, Dh)
+    o = flash_attention_bhsd(qr, kr, vr, causal=causal, window=window,
+                             bq=bq, bk=bk, interpret=interpret)
+    return o.reshape(B, H, Sq, Dh).transpose(0, 2, 1, 3)

@@ -1,0 +1,14 @@
+"""jit'd wrapper for the fused LoRA matmul."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.lora.kernel import lora_matmul_td
+
+
+def lora_matmul(x, w, a, b, scale: float, *, interpret: bool = True):
+    """x: (..., K) -> (..., O): x W + s (x A) B fused."""
+    lead = x.shape[:-1]
+    flat = x.reshape(-1, x.shape[-1])
+    out = lora_matmul_td(flat, w, a, b, scale, interpret=interpret)
+    return out.reshape(lead + (w.shape[-1],))

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the fused LoRA matmul kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def lora_matmul_ref(x, w, a, b, scale: float):
+    xf = x.astype(jnp.float32)
+    y = xf @ w.astype(jnp.float32) \
+        + scale * (xf @ a.astype(jnp.float32)) @ b.astype(jnp.float32)
+    return y.astype(x.dtype)

@@ -1,0 +1,29 @@
+"""jit'd wrapper for the SS-OP kernel: forward rotation and inverse."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssop.kernel import ssop_apply_td
+
+
+def ssop_apply(h, u, v, *, interpret: bool = True):
+    """H -> H Qᵀ = H + (HU)(Vᵀ - I)Uᵀ.  h: (..., D)."""
+    r = v.shape[0]
+    w = v.T - jnp.eye(r, dtype=v.dtype)
+    lead = h.shape[:-1]
+    flat = h.reshape(-1, h.shape[-1])
+    out = ssop_apply_td(flat, u.astype(h.dtype), w.astype(h.dtype),
+                        interpret=interpret)
+    return out.reshape(lead + (h.shape[-1],))
+
+
+def ssop_apply_inverse(h, u, v, *, interpret: bool = True):
+    """H -> H Q = H + (HU)(V - I)Uᵀ (exact inverse, Q orthogonal)."""
+    r = v.shape[0]
+    w = v - jnp.eye(r, dtype=v.dtype)
+    lead = h.shape[:-1]
+    flat = h.reshape(-1, h.shape[-1])
+    out = ssop_apply_td(flat, u.astype(h.dtype), w.astype(h.dtype),
+                        interpret=interpret)
+    return out.reshape(lead + (h.shape[-1],))

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the SS-OP kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ssop_apply_ref(h, u, w):
+    """out = H + (H U) W Uᵀ, fp32 accumulation."""
+    hf = h.astype(jnp.float32)
+    uf = u.astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+    return (hf + (hf @ uf) @ wf @ uf.T).astype(h.dtype)

@@ -1,0 +1,271 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape)
+on the production meshes, with ShapeDtypeStruct stand-ins (no allocation).
+
+For each combination this records:
+  - compiled.memory_analysis()  (per-device bytes: proves it fits)
+  - compiled.cost_analysis()    (XLA's aggregate flops/bytes)
+  - the optimized HLO text (zstd-compressed) for the loop-aware roofline
+    parser in repro.analysis.hlo_cost (XLA's cost_analysis counts while-loop
+    bodies ONCE; our parser multiplies by trip counts).
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-8b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --all [--multi-pod]
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+import zstandard
+
+from repro.configs import REGISTRY, ASSIGNED, get_config
+from repro.configs.base import INPUT_SHAPES
+from repro.launch.mesh import make_production_mesh, chips
+from repro.launch.train import (make_train_step, make_serve_step,
+                                batch_pspec, input_shardings,
+                                opt_state_shardings)
+from repro.models import zoo
+from repro.models.params import abstract_tree, tree_shardings
+from repro.optim import AdamW
+
+RUNS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "runs",
+                        "dryrun")
+
+
+def skip_reason(arch: str, shape_name: str):
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    if shape_name == "long_500k" and not cfg.supports_long_context:
+        return ("full-attention architecture without a sliding-window "
+                "variant; long_500k skipped per DESIGN.md §4")
+    if cfg.family == "encoder" and shape.kind == "decode":
+        return "encoder-only architecture has no decode step"
+    return None
+
+
+def build(arch: str, shape_name: str, mesh, *, per_pod_lora: bool = False,
+          rules=None, chunk: int = 2048, use_flash: bool = False,
+          elsa: bool = False, microbatches: int = 0, fsdp: bool = False):
+    """Returns (jitted_fn, example_args) fully abstract."""
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    model = zoo.get_model(cfg)
+    specs = model.specs(cfg)
+    dt = cfg.dtype()
+
+    frozen = abstract_tree(specs["frozen"], dt)
+    lora = abstract_tree(specs["lora"], dt)
+    frozen_sh = tree_shardings(specs["frozen"], mesh, rules)
+    lora_sh = tree_shardings(specs["lora"], mesh, rules)
+
+    window = cfg.sliding_window if shape_name == "long_500k" else 0
+    inputs = zoo.input_specs(cfg, shape)
+    if fsdp:
+        # batch over BOTH axes: per-layer weight all-gather replaces
+        # per-layer activation all-reduce (beyond-paper §Perf variant)
+        in_sh = {k: NamedSharding(mesh, P(
+            tuple(a for a in ("pod", "data", "model") if a in mesh.shape),
+            *([None] * (len(v.shape) - 1))))
+            for k, v in inputs.items()}
+    else:
+        in_sh = input_shardings(cfg, mesh, shape, inputs)
+
+    if shape.kind == "train":
+        opt = AdamW(lr=1e-4)
+        # microbatch so each device sees ~2 sequences per accumulation step
+        dsize = 1
+        for a in ("pod", "data"):
+            dsize *= mesh.shape.get(a, 1)
+        per_dev = max(1, shape.global_batch // dsize)
+        nm = microbatches or max(1, per_dev // 2)
+        if fsdp:
+            nm = 1       # fsdp shards batch over all chips: 1 seq/device
+        elsa_z = 0
+        if elsa:
+            from repro.launch.train import elsa_channel_specs
+            ch_specs, elsa_z = elsa_channel_specs(cfg)
+            inputs["_channel"] = ch_specs
+            in_sh["_channel"] = {k: NamedSharding(mesh, P())
+                                 for k in ch_specs}
+        step = make_train_step(cfg, optimizer=opt, window=window,
+                               chunk=chunk, use_flash=use_flash,
+                               num_microbatches=nm, elsa_z=elsa_z,
+                               per_pod_lora=per_pod_lora)
+        opt_abs = jax.eval_shape(opt.init, lora)
+        opt_sh = opt_state_shardings(opt_abs, lora_sh, mesh)
+        if per_pod_lora:
+            # hierarchical ELSA schedule: independent LoRA replica per pod
+            npod = mesh.shape["pod"]
+
+            def podded(tree, sh_tree):
+                t = jax.tree_util.tree_map(
+                    lambda s: jax.ShapeDtypeStruct((npod,) + s.shape,
+                                                   s.dtype), tree)
+                sh = jax.tree_util.tree_map(
+                    lambda ns: NamedSharding(
+                        mesh, P(*(("pod",) + tuple(ns.spec)))), sh_tree)
+                return t, sh
+
+            lora, lora_sh = podded(lora, lora_sh)
+            opt_abs, opt_sh = podded(opt_abs, opt_sh)
+            inputs = {k: jax.ShapeDtypeStruct(
+                (npod, v.shape[0] // npod) + v.shape[1:], v.dtype)
+                for k, v in inputs.items() if k != "_channel"}
+            in_sh = {k: NamedSharding(
+                mesh, P("pod", "data", *([None] * (len(v.shape) - 2))))
+                for k, v in inputs.items()}
+        fn = jax.jit(step,
+                     in_shardings=(frozen_sh, lora_sh, opt_sh, in_sh),
+                     out_shardings=(lora_sh, opt_sh,
+                                    NamedSharding(mesh, P("pod") if
+                                                  per_pod_lora else P())))
+        args = (frozen, lora, opt_abs, inputs)
+    elif shape.kind == "prefill":
+        def prefill(fz, lp, batch):
+            logits, _ = model.forward(cfg, fz, lp, batch, window=window,
+                                      chunk=chunk, remat=False)
+            return jnp.argmax(logits[:, -1, :cfg.vocab_size], -1)
+        bp = batch_pspec(mesh, shape.global_batch)
+        fn = jax.jit(prefill, in_shardings=(frozen_sh, lora_sh, in_sh),
+                     out_shardings=NamedSharding(mesh, bp))
+        args = (frozen, lora, inputs)
+    else:  # decode
+        cache_specs = model.cache_specs(cfg, shape.global_batch,
+                                        shape.seq_len)
+        cache = abstract_tree(cache_specs, dt)
+        cache_sh = tree_shardings(cache_specs, mesh, rules)
+        step = make_serve_step(cfg, window=window, chunk=4096)
+        bp = batch_pspec(mesh, shape.global_batch)
+        fn = jax.jit(step,
+                     in_shardings=(frozen_sh, lora_sh, cache_sh, in_sh),
+                     out_shardings=(NamedSharding(mesh, bp), cache_sh),
+                     donate_argnums=(2,))
+        args = (frozen, lora, cache, inputs)
+    return fn, args
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+            out_dir: str = RUNS_DIR, tag: str = "", save_hlo: bool = True,
+            **build_kw):
+    mesh_name = "pod512" if multi_pod else "pod256"
+    name = f"{arch}__{shape_name}__{mesh_name}{tag}"
+    reason = skip_reason(arch, shape_name)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "tag": tag, "chips": 512 if multi_pod else 256}
+    os.makedirs(out_dir, exist_ok=True)
+    if reason:
+        rec["status"] = "skipped"
+        rec["reason"] = reason
+        with open(os.path.join(out_dir, name + ".json"), "w") as f:
+            json.dump(rec, f, indent=2)
+        print(f"[dryrun] SKIP {name}: {reason}")
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        with mesh:
+            fn, args = build(arch, shape_name, mesh, **build_kw)
+            lowered = fn.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            rec["status"] = "ok"
+            rec["lower_s"] = round(t_lower, 2)
+            rec["compile_s"] = round(t_compile, 2)
+            if mem is not None:
+                for attr in ("argument_size_in_bytes",
+                             "output_size_in_bytes",
+                             "temp_size_in_bytes",
+                             "alias_size_in_bytes",
+                             "generated_code_size_in_bytes"):
+                    rec.setdefault("memory", {})[attr] = int(
+                        getattr(mem, attr, 0) or 0)
+                print(f"[dryrun] {name} memory_analysis:", rec["memory"])
+            rec["cost"] = {k: float(v) for k, v in (cost or {}).items()
+                           if isinstance(v, (int, float))}
+            print(f"[dryrun] {name} cost_analysis flops="
+                  f"{rec['cost'].get('flops', 0):.3e} bytes="
+                  f"{rec['cost'].get('bytes accessed', 0):.3e}")
+            if save_hlo:
+                hlo = compiled.as_text()
+                rec["hlo_bytes"] = len(hlo)
+                cctx = zstandard.ZstdCompressor(level=6)
+                with open(os.path.join(out_dir, name + ".hlo.zst"), "wb") as f:
+                    f.write(cctx.compress(hlo.encode()))
+    except Exception as e:  # noqa: BLE001 — record failures, don't die
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[dryrun] FAIL {name}: {rec['error']}")
+    rec["total_s"] = round(time.time() - t0, 2)
+    with open(os.path.join(out_dir, name + ".json"), "w") as f:
+        json.dump(rec, f, indent=2)
+    status = rec["status"]
+    print(f"[dryrun] {name}: {status} ({rec['total_s']}s)")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(REGISTRY), default=None)
+    ap.add_argument("--shape", choices=sorted(INPUT_SHAPES), default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out-dir", default=RUNS_DIR)
+    ap.add_argument("--no-hlo", action="store_true")
+    ap.add_argument("--elsa", action="store_true",
+                    help="enable the ELSA split channel in train_step")
+    ap.add_argument("--per-pod-lora", action="store_true",
+                    help="hierarchical schedule: per-pod LoRA replicas")
+    ap.add_argument("--expert-parallel", action="store_true",
+                    help="shard MoE experts over the model axis")
+    ap.add_argument("--chunk", type=int, default=2048)
+    ap.add_argument("--microbatches", type=int, default=0)
+    ap.add_argument("--fsdp", action="store_true",
+                    help="shard the batch over data AND model axes")
+    args = ap.parse_args()
+
+    build_kw = {"elsa": args.elsa, "per_pod_lora": args.per_pod_lora,
+                "chunk": args.chunk, "microbatches": args.microbatches,
+                "fsdp": args.fsdp}
+    if args.expert_parallel:
+        from repro.models.params import DEFAULT_RULES
+        rules = dict(DEFAULT_RULES)
+        rules["experts"] = ("model",)
+        rules["mlp"] = ()
+        build_kw["rules"] = rules
+
+    combos = []
+    if args.all:
+        for a in ASSIGNED:
+            for s in INPUT_SHAPES:
+                combos.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        combos = [(args.arch, args.shape)]
+
+    ok = fail = skip = 0
+    for a, s in combos:
+        rec = run_one(a, s, multi_pod=args.multi_pod, out_dir=args.out_dir,
+                      tag=args.tag, save_hlo=not args.no_hlo, **build_kw)
+        ok += rec["status"] == "ok"
+        fail += rec["status"] == "error"
+        skip += rec["status"] == "skipped"
+    print(f"[dryrun] done: {ok} ok, {skip} skipped, {fail} failed")
+    if fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

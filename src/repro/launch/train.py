@@ -1,0 +1,276 @@
+"""Step builders + sharding assembly for training and serving.
+
+``make_train_step`` builds the LoRA fine-tuning step (frozen backbone, the
+paper's adapter-only optimization): loss -> grads over the LoRA tree ->
+AdamW.  With ``per_pod_lora=True`` the step is vmapped over the "pod" axis
+(``spmd_axis_name``) so each pod keeps an independent LoRA replica —
+ELSA's hierarchical schedule: edge-level (data-axis) gradient reduction
+every step, cloud-level (pod-axis) fusion only at ``cloud_sync`` time.
+
+``make_serve_step`` builds the single-token decode step against a sharded
+KV/state cache.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.launch.mesh import data_axes
+from repro.models import zoo
+from repro.models.params import (abstract_tree, tree_shardings, Spec,
+                                 is_spec)
+from repro.optim import AdamW
+
+
+# ---------------------------------------------------------------------------
+# steps
+# ---------------------------------------------------------------------------
+
+def elsa_boundaries(cfg) -> tuple:
+    """Default tripartite split for an arch: p = min(p_max, L//4),
+    o_fix = 2 (ELSA §III.B.2 with the paper's p_max=6)."""
+    n = cfg.num_layers - (cfg.moe.first_dense_layers if cfg.moe else 0)
+    p = max(1, min(6, n // 4))
+    o = 2
+    return (p, n - p - o)
+
+
+def elsa_channel_specs(cfg, *, r: int = 16, y: int = 3,
+                       rho: float = 2.1):
+    """Abstract channel parameters (SS-OP basis + sketch hashes) shipped
+    inside the batch under '_channel' for the dry-run / launcher."""
+    import jax as _jax
+    d = cfg.d_model
+    z = max(8, int(d / (rho * y)))
+    return {
+        "u": _jax.ShapeDtypeStruct((d, r), jnp.float32),
+        "v": _jax.ShapeDtypeStruct((r, r), jnp.float32),
+        "bucket": _jax.ShapeDtypeStruct((y, d), jnp.int32),
+        "sign": _jax.ShapeDtypeStruct((y, d), jnp.float32),
+    }, z
+
+
+def make_train_step(cfg: ArchConfig, *, optimizer: Optional[AdamW] = None,
+                    window: int = 0, chunk: int = 2048,
+                    per_pod_lora: bool = False, use_flash: bool = False,
+                    num_microbatches: int = 1, elsa_z: int = 0):
+    """LoRA fine-tuning step.  ``num_microbatches > 1`` runs gradient
+    accumulation over microbatch slices of the global batch (per-microbatch
+    activation footprint; LoRA grads are tiny, so the accumulator is
+    nearly free).
+
+    If the batch carries a ``'_channel'`` entry (u, v, bucket, sign) and
+    ``elsa_z`` is set, the ELSA tripartite split channel is applied at the
+    Eq. 8-9 boundaries inside the layer stack (dense/moe families)."""
+    model = zoo.get_model(cfg)
+    opt = optimizer or AdamW(lr=1e-4)
+
+    def single_loss(frozen, lp, batch, channel_params=None):
+        fwd = dict(window=window, chunk=chunk, remat=True)
+        if channel_params is not None and cfg.family in ("dense", "moe"):
+            from repro.core.sketch import SketchPlan
+            from repro.core.split_training import Channel
+            from repro.core.ssop import SSOP
+            ch = Channel(SSOP(channel_params["u"], channel_params["v"]),
+                         SketchPlan(channel_params["bucket"],
+                                    channel_params["sign"], elsa_z))
+            fwd.update(boundaries=elsa_boundaries(cfg), channel=ch)
+        logits, aux = model.forward(cfg, frozen, lp, batch, **fwd)
+        if cfg.family == "encoder":
+            return zoo.classification_loss(logits, batch["labels"])
+        return zoo.loss_fn(cfg, logits, batch["tokens"], aux)
+
+    def core(frozen, lora, opt_state, batch):
+        batch = dict(batch)
+        channel_params = batch.pop("_channel", None)
+        if num_microbatches <= 1:
+            loss, grads = jax.value_and_grad(
+                lambda lp: single_loss(frozen, lp, batch, channel_params)
+            )(lora)
+        else:
+            nm = num_microbatches
+            # split the *sharded* batch dim (B -> (B/nm, nm)) then swap, so
+            # each device's block divides evenly into microbatches and GSPMD
+            # never has to reshard (a (nm, B/nm) reshape of a batch-sharded
+            # dim forces replication -> nm x redundant compute).
+            mbs = jax.tree_util.tree_map(
+                lambda x: jnp.swapaxes(
+                    x.reshape((x.shape[0] // nm, nm) + x.shape[1:]), 0, 1),
+                batch)
+
+            def body(carry, mb):
+                g_acc, l_acc = carry
+                l, g = jax.value_and_grad(
+                    lambda lp: single_loss(frozen, lp, mb, channel_params)
+                )(lora)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(a.dtype), g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), lora)
+            (g_sum, l_sum), _ = jax.lax.scan(body, (g0, jnp.zeros(())), mbs)
+            grads = jax.tree_util.tree_map(lambda g: g / nm, g_sum)
+            loss = l_sum / nm
+        new_lora, new_opt = opt.update(lora, grads, opt_state)
+        return new_lora, new_opt, loss
+
+    if not per_pod_lora:
+        return core
+
+    # hierarchical schedule: one independent LoRA replica per pod
+    vstep = jax.vmap(core, in_axes=(None, 0, 0, 0), out_axes=(0, 0, 0),
+                     spmd_axis_name="pod")
+    return vstep
+
+
+def make_cloud_sync():
+    """Periodic cloud-level fusion of per-pod LoRA replicas (Eq. 15 with
+    uniform weights — trust weighting lives in the federation layer)."""
+    def sync(lora_pods):
+        return jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x.mean(0, keepdims=True), x.shape),
+            lora_pods)
+    return sync
+
+
+def make_serve_step(cfg: ArchConfig, *, window: int = 0, chunk: int = 4096):
+    model = zoo.get_model(cfg)
+
+    def serve_step(frozen, lora, cache, batch):
+        logits, new_cache = model.decode_step(cfg, frozen, lora, cache,
+                                              batch, window=window,
+                                              chunk=chunk)
+        nxt = jnp.argmax(logits[:, -1, :cfg.vocab_size], axis=-1)
+        return nxt.astype(jnp.int32), new_cache
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# shardings
+# ---------------------------------------------------------------------------
+
+def batch_pspec(mesh, global_batch: int) -> P:
+    axes = data_axes(mesh)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    if axes and global_batch % size == 0:
+        return P(axes if len(axes) > 1 else axes[0])
+    return P()
+
+
+def input_shardings(cfg, mesh, shape: InputShape, specs):
+    """NamedShardings for the model-input dict (batch dim data-parallel)."""
+    bp = batch_pspec(mesh, shape.global_batch)
+    first = tuple(bp)[0] if len(tuple(bp)) else None
+    out = {}
+    for k, v in specs.items():
+        extra = (None,) * (len(v.shape) - 1)
+        out[k] = NamedSharding(mesh, P(*((first,) + extra)))
+    return out
+
+
+def opt_state_shardings(opt_abstract, lora_shardings, mesh):
+    """AdamW state: m/v mirror the LoRA shardings; step is replicated."""
+    rep = NamedSharding(mesh, P())
+    return {"step": rep,
+            "m": lora_shardings,
+            "v": lora_shardings}
+
+
+# ---------------------------------------------------------------------------
+# CLI driver: single-host LoRA fine-tuning on synthetic LM data
+# ---------------------------------------------------------------------------
+
+def _main():
+    import argparse
+    import time
+
+    import numpy as np
+
+    from repro.checkpoint import save_state
+    from repro.configs import ASSIGNED, get_config
+
+    ap = argparse.ArgumentParser(
+        description="LoRA fine-tune an assigned arch on synthetic LM data")
+    ap.add_argument("--arch", default="olmo-1b", choices=ASSIGNED)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--full", action="store_true",
+                    help="full-size config (needs accelerators)")
+    ap.add_argument("--elsa", action="store_true",
+                    help="train through the ELSA tripartite split channel")
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--log-every", type=int, default=20)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full:
+        cfg = cfg.reduced()
+    model = zoo.get_model(cfg)
+    params = None
+    from repro.models.params import init_tree, count_params
+    tree = init_tree(model.specs(cfg), jax.random.PRNGKey(0), cfg.dtype())
+    frozen, lora = tree["frozen"], tree["lora"]
+    n_frozen = count_params(model.specs(cfg)["frozen"])
+    n_lora = count_params(model.specs(cfg)["lora"])
+    print(f"{args.arch}{'' if args.full else ' (reduced)'}: "
+          f"{n_frozen/1e6:.1f}M frozen + {n_lora/1e6:.2f}M LoRA params")
+
+    opt = AdamW(lr=args.lr)
+    opt_state = opt.init(lora)
+    elsa_z = 0
+    channel_params = None
+    if args.elsa and cfg.family in ("dense", "moe"):
+        specs, elsa_z = elsa_channel_specs(cfg)
+        rngs = jax.random.split(jax.random.PRNGKey(42), 4)
+        import numpy as _np
+        rng = _np.random.default_rng(42)
+        q_, _ = _np.linalg.qr(rng.standard_normal((16, 16)))
+        channel_params = {
+            "u": jnp.linalg.qr(jax.random.normal(
+                rngs[0], (cfg.d_model, 16)))[0],
+            "v": jnp.asarray(q_, jnp.float32),
+            "bucket": jnp.asarray(rng.integers(
+                0, elsa_z, (3, cfg.d_model)), jnp.int32),
+            "sign": jnp.asarray(rng.choice(
+                [-1.0, 1.0], (3, cfg.d_model)), jnp.float32),
+        }
+    step = jax.jit(make_train_step(cfg, optimizer=opt, elsa_z=elsa_z))
+
+    # synthetic LM stream: structured bigram-ish data so loss can fall
+    rng = np.random.default_rng(0)
+    base = rng.integers(0, cfg.vocab_size, size=(64,))
+
+    def sample_batch():
+        starts = rng.integers(0, 64, size=(args.batch,))
+        toks = np.stack([np.roll(base, -s)[: args.seq] for s in starts])
+        noise = rng.integers(0, cfg.vocab_size, toks.shape)
+        mask = rng.random(toks.shape) < 0.1
+        return {"tokens": jnp.asarray(np.where(mask, noise, toks))}
+
+    t0 = time.time()
+    for i in range(args.steps):
+        batch = sample_batch()
+        if channel_params is not None:
+            batch["_channel"] = channel_params
+        lora, opt_state, loss = step(frozen, lora, opt_state, batch)
+        if i % args.log_every == 0 or i == args.steps - 1:
+            print(f"step {i:5d}  loss {float(loss):.4f}  "
+                  f"({(time.time()-t0):.1f}s)")
+    if args.ckpt:
+        save_state(args.ckpt, params={"lora": lora}, step=args.steps)
+        print(f"saved LoRA checkpoint -> {args.ckpt}")
+
+
+if __name__ == "__main__":
+    _main()

@@ -1,0 +1,95 @@
+"""BERT-base encoder — the paper's own model (§IV.A).
+
+Post-LN encoder with token/position/segment embeddings, [CLS] pooler, and a
+pluggable classification head.  Exposes both sequence representations (for
+ELSA's behavioral fingerprints, Eq. 4) and per-layer split execution (for
+the tripartite split training, §III.B.2): ``run_blocks(lo, hi)`` runs
+blocks [lo, hi) so Part 1 / Part 2 / Part 3 of the split are literal slices
+of the same parameter tree.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.common import apply_norm, apply_mlp, attn_apply, stack_specs
+from repro.models.params import Spec
+
+
+def bert_specs(cfg, num_classes: int = 2):
+    d = cfg.d_model
+    block = {"attn": common.attn_specs(cfg),
+             "ln1": common.norm_specs("layernorm", d),
+             "mlp": common.mlp_specs(cfg),
+             "ln2": common.norm_specs("layernorm", d)}
+    frozen = {
+        "embed": Spec((cfg.padded_vocab, d), ("vocab", "embed"), "embed"),
+        "pos": Spec((cfg.max_position_embeddings, d), (None, "embed"), "embed"),
+        "seg": Spec((2, d), (None, "embed"), "embed"),
+        "ln_embed": common.norm_specs("layernorm", d),
+        "blocks": stack_specs(cfg.num_layers, block),
+    }
+    lora = {"blocks": stack_specs(cfg.num_layers,
+                                  {"attn": common.attn_lora_specs(cfg)})}
+    # task head is trainable (paper: output layer trainable, negligible size)
+    lora["pooler"] = {"w": Spec((d, d), ("embed", None)),
+                      "b": Spec((d,), (None,), "zeros")}
+    lora["head"] = {"w": Spec((d, num_classes), ("embed", None)),
+                    "b": Spec((num_classes,), (None,), "zeros")}
+    return {"frozen": frozen, "lora": lora}
+
+
+def embed(cfg, params, tokens, segments=None):
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = x + params["pos"][:S][None]
+    if segments is not None:
+        x = x + jnp.take(params["seg"], segments, axis=0)
+    return apply_norm("layernorm", params["ln_embed"], x.astype(cfg.adtype()))
+
+
+def block_apply(cfg, p, lp, x, *, mask_valid: Optional[jnp.ndarray] = None):
+    """Post-LN BERT block.  mask_valid: (B, S) bool attention mask."""
+    positions = jnp.arange(x.shape[1])
+    h, _ = attn_apply(cfg, p["attn"], lp["attn"] if lp else None, x,
+                      positions=positions, causal=False)
+    x = apply_norm("layernorm", p["ln1"], x + h)
+    f = apply_mlp(cfg, p["mlp"], x)
+    x = apply_norm("layernorm", p["ln2"], x + f)
+    if mask_valid is not None:
+        x = x * mask_valid[..., None].astype(x.dtype)
+    return x
+
+
+def run_blocks(cfg, params, lora, x, lo: int, hi: int,
+               mask_valid: Optional[jnp.ndarray] = None):
+    """Run encoder blocks [lo, hi) — the split-learning building block.
+
+    Uses a python loop over layer slices (p_n/q_n/o are small and dynamic
+    per client; the federation simulation runs reduced models).
+    """
+    for i in range(lo, hi):
+        p = jax.tree_util.tree_map(lambda a: a[i], params["blocks"])
+        lp = (jax.tree_util.tree_map(lambda a: a[i], lora["blocks"])
+              if lora else None)
+        x = block_apply(cfg, p, lp, x, mask_valid=mask_valid)
+    return x
+
+
+def bert_forward(cfg, params, lora, tokens, segments=None, mask_valid=None,
+                 **_):
+    """Full encoder -> (sequence_output, cls_embedding, logits)."""
+    frozen = params
+    x = embed(cfg, frozen, tokens, segments)
+    x = run_blocks(cfg, frozen, lora, x, 0, cfg.num_layers, mask_valid)
+    cls = x[:, 0, :]
+    logits = None
+    if lora is not None and "head" in lora:
+        pooled = jnp.tanh(cls @ lora["pooler"]["w"].astype(cls.dtype)
+                          + lora["pooler"]["b"].astype(cls.dtype))
+        logits = pooled @ lora["head"]["w"].astype(cls.dtype) \
+            + lora["head"]["b"].astype(cls.dtype)
+    return x, cls, logits

@@ -1,0 +1,153 @@
+"""Jamba-style hybrid LM [arXiv:2403.19887]: Mamba + attention 1:7
+interleave with MoE every other layer.
+
+The 32-layer stack is organised as 4 periods of 8 layers
+(attention at in-period index 4, MoE FFN on odd in-period indices);
+periods are stacked and scanned.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common, moe as moe_lib, mamba as mamba_lib
+from repro.models.common import apply_norm, apply_mlp, stack_specs
+from repro.models.params import Spec
+
+
+def _period(cfg) -> int:
+    return cfg.attn_every
+
+
+def _n_periods(cfg) -> int:
+    assert cfg.num_layers % _period(cfg) == 0
+    return cfg.num_layers // _period(cfg)
+
+
+def _layer_spec(cfg, kind: str, use_moe: bool):
+    p = {"ln1": common.norm_specs(cfg.norm, cfg.d_model),
+         "ln2": common.norm_specs(cfg.norm, cfg.d_model)}
+    p["inner"] = (common.attn_specs(cfg) if kind == "attn"
+                  else mamba_lib.mamba_specs(cfg))
+    if use_moe:
+        p["moe"] = moe_lib.moe_specs(cfg)
+    else:
+        p["mlp"] = common.mlp_specs(cfg)
+    return p
+
+
+def _layer_lora_spec(cfg, kind: str):
+    return {"inner": (common.attn_lora_specs(cfg) if kind == "attn"
+                      else mamba_lib.mamba_lora_specs(cfg))}
+
+
+def _period_kinds(cfg):
+    per = _period(cfg)
+    kinds = []
+    for i in range(per):
+        kind = "attn" if i == per // 2 else "mamba"
+        use_moe = cfg.moe is not None and i % cfg.moe.every == 1
+        kinds.append((kind, use_moe))
+    return kinds
+
+
+def hybrid_specs(cfg):
+    kinds = _period_kinds(cfg)
+    period_p = {f"l{i}": _layer_spec(cfg, k, m) for i, (k, m) in enumerate(kinds)}
+    period_l = {f"l{i}": _layer_lora_spec(cfg, k) for i, (k, _) in enumerate(kinds)}
+    frozen = {
+        "embed": Spec((cfg.padded_vocab, cfg.d_model), ("vocab", "embed"), "embed"),
+        "periods": stack_specs(_n_periods(cfg), period_p),
+        "final_norm": common.norm_specs(cfg.norm, cfg.d_model),
+        "head": Spec((cfg.d_model, cfg.padded_vocab), ("embed", "vocab")),
+    }
+    return {"frozen": frozen, "lora": {"periods": stack_specs(_n_periods(cfg), period_l)}}
+
+
+def _apply_layer(cfg, kind, use_moe, p, lp, x, *, positions, cache=None,
+                 window=0, chunk=2048):
+    xn = apply_norm(cfg.norm, p["ln1"], x)
+    if kind == "attn":
+        h, nc = common.attn_apply(cfg, p["inner"],
+                                  lp["inner"] if lp else None, xn,
+                                  positions=positions, cache=cache,
+                                  window=window, chunk=chunk)
+    else:
+        h, nc = mamba_lib.mamba_apply(cfg, p["inner"],
+                                      lp["inner"] if lp else None, xn,
+                                      cache=cache)
+    x = x + h
+    xn = apply_norm(cfg.norm, p["ln2"], x)
+    aux = jnp.zeros((), jnp.float32)
+    if use_moe:
+        f, aux = moe_lib.moe_apply(cfg, p["moe"], xn)
+    else:
+        f = apply_mlp(cfg, p["mlp"], xn)
+    return x + f, nc, aux
+
+
+def hybrid_forward(cfg, params, lora, tokens, *, window=0, chunk=2048,
+                   remat=True):
+    kinds = _period_kinds(cfg)
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.adtype())
+    positions = jnp.arange(S)
+
+    def body(carry, pl):
+        xc, aux_acc = carry
+        p, lp = pl
+        for i, (kind, use_moe) in enumerate(kinds):
+            xc, _, aux = _apply_layer(cfg, kind, use_moe, p[f"l{i}"],
+                                      lp[f"l{i}"] if lp else None, xc,
+                                      positions=positions, window=window,
+                                      chunk=chunk)
+            aux_acc = aux_acc + aux
+        return (xc, aux_acc), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    (x, aux), _ = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)),
+        (params["periods"], lora["periods"] if lora else None))
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    return x @ params["head"].astype(x.dtype), aux
+
+
+def hybrid_cache_specs(cfg, batch: int, seq_len: int):
+    kinds = _period_kinds(cfg)
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    per = {}
+    for i, (kind, _) in enumerate(kinds):
+        if kind == "attn":
+            per[f"l{i}"] = {
+                "k": Spec((batch, seq_len, kv, hd), ("batch", None, "kv_heads", None)),
+                "v": Spec((batch, seq_len, kv, hd), ("batch", None, "kv_heads", None)),
+                "len": Spec((), (), "zeros", 1.0, "int32")}
+        else:
+            per[f"l{i}"] = mamba_lib.mamba_cache_specs(cfg, batch)
+    return {"periods": stack_specs(_n_periods(cfg), per)}
+
+
+def hybrid_decode_step(cfg, params, lora, cache, tokens, *, window=0,
+                       chunk=4096):
+    kinds = _period_kinds(cfg)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.adtype())
+
+    def body(xc, pl):
+        p, lp, c = pl
+        ncs = {}
+        for i, (kind, use_moe) in enumerate(kinds):
+            ci = c[f"l{i}"]
+            pos = (ci["len"] + jnp.arange(1)) if kind == "attn" else jnp.arange(1)
+            xc, nc, _ = _apply_layer(cfg, kind, use_moe, p[f"l{i}"],
+                                     lp[f"l{i}"] if lp else None, xc,
+                                     positions=pos, cache=ci, window=window,
+                                     chunk=chunk)
+            ncs[f"l{i}"] = nc
+        return xc, ncs
+
+    x, new_periods = jax.lax.scan(
+        body, x, (params["periods"], lora["periods"] if lora else None,
+                  cache["periods"]))
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    return x @ params["head"].astype(x.dtype), {"periods": new_periods}

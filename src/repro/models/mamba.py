@@ -1,0 +1,147 @@
+"""Mamba selective-SSM layer (for Jamba hybrid blocks) [arXiv:2403.19887].
+
+Training/prefill use a chunkwise scan: ``lax.scan`` over chunks of
+``cfg.ssm.chunk`` steps, with the within-chunk recurrence solved in closed
+form via cumulative log-decays (fp32, chunk kept small so the
+``exp(-cum)`` rescaling never overflows).  Decode is a single recurrence
+step on the carried (conv_state, ssm_state).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import Spec
+
+
+def _d_inner(cfg):
+    return cfg.ssm.expand * cfg.d_model
+
+
+def _dt_rank(cfg):
+    return cfg.ssm.dt_rank or max(1, -(-cfg.d_model // 16))
+
+
+def mamba_specs(cfg):
+    s = cfg.ssm
+    d, di, dr, ds = cfg.d_model, _d_inner(cfg), _dt_rank(cfg), s.d_state
+    return {
+        "w_in": Spec((d, 2 * di), ("embed", "mlp")),
+        "conv_w": Spec((s.d_conv, di), (None, "mlp")),
+        "conv_b": Spec((di,), ("mlp",), "zeros"),
+        "w_bcdt": Spec((di, 2 * ds + dr), ("mlp", None)),
+        "w_dt": Spec((dr, di), (None, "mlp")),
+        "b_dt": Spec((di,), ("mlp",), "const", -4.6),   # softplus^-1(0.01)
+        "log_a": Spec((di, ds), ("mlp", "state"), "zeros"),  # A = -1
+        "d_skip": Spec((di,), ("mlp",), "ones"),
+        "w_out": Spec((di, d), ("mlp", "embed")),
+    }
+
+
+def mamba_lora_specs(cfg):
+    if "q" not in cfg.lora.targets and "v" not in cfg.lora.targets:
+        return {}
+    d, di, r = cfg.d_model, _d_inner(cfg), cfg.lora.rank
+    return {"in_a": Spec((d, r), ("embed", "lora_r")),
+            "in_b": Spec((r, 2 * di), ("lora_r", "mlp"), "zeros")}
+
+
+def _causal_conv(cfg, p, x, conv_state=None):
+    """Depthwise causal conv along time.  x: (B, S, di)."""
+    K = cfg.ssm.d_conv
+    if conv_state is not None:
+        xp = jnp.concatenate([conv_state, x], 1)       # (B, K-1+S, di)
+    else:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * p["conv_w"][i].astype(x.dtype)
+              for i in range(K))
+    new_state = xp[:, -(K - 1):, :] if K > 1 else jnp.zeros_like(x[:, :0])
+    return out + p["conv_b"].astype(x.dtype), new_state
+
+
+def _ssm_params(cfg, p, xc):
+    """Input-dependent (dt, B, C).  xc: (B, L, di) post-conv activations."""
+    s = cfg.ssm
+    dr = _dt_rank(cfg)
+    bcdt = xc @ p["w_bcdt"].astype(xc.dtype)
+    b_ssm = bcdt[..., : s.d_state]
+    c_ssm = bcdt[..., s.d_state: 2 * s.d_state]
+    dt = jax.nn.softplus(
+        bcdt[..., 2 * s.d_state:] @ p["w_dt"].astype(xc.dtype)
+        + p["b_dt"].astype(xc.dtype))                   # (B, L, di)
+    return dt.astype(jnp.float32), b_ssm.astype(jnp.float32), c_ssm.astype(jnp.float32)
+
+
+def _chunk_scan(cfg, p, xc, x_ssm, h0):
+    """Within-chunk closed form.  xc: (B, L, di) conv output (gives dt,B,C);
+    x_ssm: (B, L, di) the SSM input; h0: (B, di, ds) carry.  fp32 inside."""
+    a = -jnp.exp(p["log_a"].astype(jnp.float32))        # (di, ds), negative
+    dt, b_ssm, c_ssm = _ssm_params(cfg, p, xc)
+    x32 = x_ssm.astype(jnp.float32)
+    # decay exponents: e[t] = dt[t] * a  (B,L,di,ds); cumulative over t
+    e = dt[..., None] * a                               # (B,L,di,ds)
+    cum = jnp.cumsum(e, axis=1)                         # negative, monotone
+    # h[t] = exp(cum[t]) * (h0 + sum_{τ<=t} exp(-cum[τ]) dt[τ]B[τ]x[τ])
+    u = (dt * x32)[..., None] * b_ssm[:, :, None, :]    # (B,L,di,ds)
+    # h[t] = Σ_τ exp(cum[t]-cum[τ]) u[τ]; computed as exp(cum)·cumsum(exp(-cum)u)
+    inner = jnp.cumsum(u * jnp.exp(jnp.clip(-cum, None, 60.0)), axis=1)
+    h = jnp.exp(cum) * (h0[:, None] + inner)            # (B,L,di,ds)
+    y = jnp.einsum("blds,bls->bld", h, c_ssm)
+    y = y + x32 * p["d_skip"].astype(jnp.float32)
+    return y.astype(x_ssm.dtype), h[:, -1]
+
+
+def mamba_apply(cfg, p, lp, x, *, cache=None):
+    """x: (B, S, D).  cache: {'conv': (B,K-1,di), 'ssm': (B,di,ds)} or None."""
+    s = cfg.ssm
+    B, S, D = x.shape
+    di = _d_inner(cfg)
+    xz = x @ p["w_in"].astype(x.dtype)
+    if lp is not None and "in_a" in lp:
+        xz = xz + ((x @ lp["in_a"].astype(x.dtype)) @ lp["in_b"].astype(x.dtype)
+                   ) * jnp.asarray(cfg.lora.alpha / cfg.lora.rank, x.dtype)
+    xin, z = xz[..., :di], xz[..., di:]
+
+    conv_state = cache["conv"] if cache is not None else None
+    xc, new_conv = _causal_conv(cfg, p, xin, conv_state)
+    xc = jax.nn.silu(xc)
+
+    h0 = (cache["ssm"].astype(jnp.float32) if cache is not None
+          else jnp.zeros((B, di, s.d_state), jnp.float32))
+
+    if S == 1:  # decode: single recurrence step
+        dt, b_ssm, c_ssm = _ssm_params(cfg, p, xc)
+        a = -jnp.exp(p["log_a"].astype(jnp.float32))
+        dec = jnp.exp(dt[:, 0, :, None] * a)            # (B,di,ds)
+        h = dec * h0 + (dt[:, 0] * xc[:, 0].astype(jnp.float32))[..., None] \
+            * b_ssm[:, 0, None, :]
+        y = jnp.einsum("bds,bs->bd", h, c_ssm[:, 0])[:, None, :]
+        y = y + xc.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)
+        y = y.astype(x.dtype)
+        h_last = h
+    else:
+        L = min(s.chunk, S)
+        assert S % L == 0, f"S={S} not divisible by chunk={L}"
+        nc = S // L
+        xcs = xc.reshape(B, nc, L, di).transpose(1, 0, 2, 3)
+
+        def body(h, xc_chunk):
+            y, h_new = _chunk_scan(cfg, p, xc_chunk, xc_chunk, h)
+            return h_new, y
+
+        h_last, ys = jax.lax.scan(body, h0, xcs)
+        y = ys.transpose(1, 0, 2, 3).reshape(B, S, di)
+
+    out = (y * jax.nn.silu(z)) @ p["w_out"].astype(x.dtype)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv.astype(cache["conv"].dtype),
+                     "ssm": h_last.astype(cache["ssm"].dtype)}
+    return out, new_cache
+
+
+def mamba_cache_specs(cfg, batch: int, dtype_tag: str = "cache"):
+    s = cfg.ssm
+    di = _d_inner(cfg)
+    return {"conv": Spec((batch, s.d_conv - 1, di), ("batch", None, "mlp"), "zeros"),
+            "ssm": Spec((batch, di, s.d_state), ("batch", "mlp", "state"), "zeros")}

@@ -1,0 +1,90 @@
+"""Mixture-of-Experts FFN (GShard/Switch-style capacity-bounded dispatch).
+
+TPU adaptation: token->expert dispatch is expressed as scatter/gather over an
+(E*C, D) buffer (capacity C per expert) so the expert matmuls are dense
+einsums on the MXU; no per-token control flow.  The router runs in fp32.
+
+Load-balance auxiliary loss follows Switch Transformer:
+``aux = E * sum_e fraction_tokens_e * mean_router_prob_e``.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import Spec
+from repro.models.common import activation
+
+
+def moe_specs(cfg):
+    m = cfg.moe
+    d, f, e = cfg.d_model, m.expert_d_ff or cfg.d_ff, m.num_experts
+    p = {
+        "router": Spec((d, e), ("embed", "experts")),
+        "w_gate": Spec((e, d, f), ("experts", "embed", "mlp")),
+        "w_up": Spec((e, d, f), ("experts", "embed", "mlp")),
+        "w_down": Spec((e, f, d), ("experts", "mlp", "embed")),
+    }
+    if m.num_shared_experts:
+        fs = f * m.num_shared_experts
+        p["shared"] = {
+            "w_gate": Spec((d, fs), ("embed", "mlp")),
+            "w_up": Spec((d, fs), ("embed", "mlp")),
+            "w_down": Spec((fs, d), ("mlp", "embed")),
+        }
+    return p
+
+
+def _capacity(m, n_tokens: int) -> int:
+    c = int(m.capacity_factor * m.experts_per_token * n_tokens / m.num_experts)
+    return max(8, ((c + 7) // 8) * 8)
+
+
+def moe_apply(cfg, p, x, *, return_aux: bool = True
+              ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+    """x: (B, S, D) -> (B, S, D), aux_loss (scalar fp32)."""
+    m = cfg.moe
+    B, S, D = x.shape
+    T = B * S
+    k = m.experts_per_token
+    E = m.num_experts
+    C = _capacity(m, T)
+    xt = x.reshape(T, D)
+
+    logits = (xt.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, -1)                       # (T, E)
+    gate_vals, sel = jax.lax.top_k(probs, k)                 # (T, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = sel.reshape(-1)                                 # (T*k,)
+    oh = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)          # (T*k, E)
+    pos_in_e = ((jnp.cumsum(oh, axis=0) - oh) * oh).sum(-1)  # (T*k,)
+    keep = pos_in_e < C
+    slot = jnp.where(keep, flat_e * C + pos_in_e, E * C)     # overflow -> dump row
+
+    x_rep = jnp.repeat(xt, k, axis=0)                        # (T*k, D)
+    buf = jnp.zeros((E * C + 1, D), x.dtype).at[slot].add(x_rep)
+    buf = buf[:-1].reshape(E, C, D)
+
+    g = activation(cfg.act, jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(x.dtype)))
+    u = jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(x.dtype))
+    eo = jnp.einsum("ecf,efd->ecd", g * u, p["w_down"].astype(x.dtype))
+    eo = jnp.concatenate([eo.reshape(E * C, D), jnp.zeros((1, D), x.dtype)])
+
+    out_rep = eo[slot] * keep[:, None].astype(x.dtype)       # (T*k, D)
+    out = (out_rep.reshape(T, k, D) *
+           gate_vals[..., None].astype(x.dtype)).sum(1)      # (T, D)
+
+    if "shared" in p:
+        sp = p["shared"]
+        sg = activation(cfg.act, xt @ sp["w_gate"].astype(x.dtype))
+        out = out + (sg * (xt @ sp["w_up"].astype(x.dtype))) @ sp["w_down"].astype(x.dtype)
+
+    aux = None
+    if return_aux:
+        frac = jnp.mean(jax.nn.one_hot(sel[:, 0], E, dtype=jnp.float32), 0)
+        mean_prob = jnp.mean(probs, 0)
+        aux = E * jnp.sum(frac * mean_prob) * m.aux_loss_weight
+    return out.reshape(B, S, D), aux

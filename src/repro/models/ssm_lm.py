@@ -1,0 +1,97 @@
+"""xLSTM language model [arXiv:2405.04517]: 48 blocks in 6 periods of
+(7 mLSTM + 1 sLSTM), scanned over periods.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common, xlstm as xl
+from repro.models.common import apply_norm, stack_specs
+from repro.models.params import Spec
+
+
+def _period(cfg) -> int:
+    return cfg.ssm.slstm_every
+
+
+def _n_periods(cfg) -> int:
+    assert cfg.num_layers % _period(cfg) == 0
+    return cfg.num_layers // _period(cfg)
+
+
+def _period_kinds(cfg):
+    per = _period(cfg)
+    return ["slstm" if i == per - 1 else "mlstm" for i in range(per)]
+
+
+def xlstm_specs(cfg):
+    kinds = _period_kinds(cfg)
+    period_p = {f"l{i}": (xl.slstm_specs(cfg) if k == "slstm"
+                          else xl.mlstm_specs(cfg))
+                for i, k in enumerate(kinds)}
+    period_l = {f"l{i}": ({} if k == "slstm" else xl.mlstm_lora_specs(cfg))
+                for i, k in enumerate(kinds)}
+    frozen = {
+        "embed": Spec((cfg.padded_vocab, cfg.d_model), ("vocab", "embed"), "embed"),
+        "periods": stack_specs(_n_periods(cfg), period_p),
+        "final_norm": common.norm_specs("layernorm", cfg.d_model),
+        "head": Spec((cfg.d_model, cfg.padded_vocab), ("embed", "vocab")),
+    }
+    return {"frozen": frozen,
+            "lora": {"periods": stack_specs(_n_periods(cfg), period_l)}}
+
+
+def xlstm_forward(cfg, params, lora, tokens, *, remat=True, **_):
+    kinds = _period_kinds(cfg)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.adtype())
+
+    def body(xc, pl):
+        p, lp = pl
+        for i, kind in enumerate(kinds):
+            if kind == "slstm":
+                xc, _ = xl.slstm_apply(cfg, p[f"l{i}"], None, xc)
+            else:
+                xc, _ = xl.mlstm_apply(cfg, p[f"l{i}"],
+                                       lp[f"l{i}"] if lp else None, xc)
+        return xc, None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, (params["periods"],
+                                  lora["periods"] if lora else None))
+    x = apply_norm("layernorm", params["final_norm"], x)
+    return x @ params["head"].astype(x.dtype), jnp.zeros((), jnp.float32)
+
+
+def xlstm_cache_specs(cfg, batch: int, seq_len: int):
+    kinds = _period_kinds(cfg)
+    per = {f"l{i}": (xl.slstm_cache_specs(cfg, batch) if k == "slstm"
+                     else xl.mlstm_cache_specs(cfg, batch))
+           for i, k in enumerate(kinds)}
+    return {"periods": stack_specs(_n_periods(cfg), per)}
+
+
+def xlstm_decode_step(cfg, params, lora, cache, tokens, **_):
+    kinds = _period_kinds(cfg)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.adtype())
+
+    def body(xc, pl):
+        p, lp, c = pl
+        ncs = {}
+        for i, kind in enumerate(kinds):
+            if kind == "slstm":
+                xc, nc = xl.slstm_apply(cfg, p[f"l{i}"], None, xc,
+                                        cache=c[f"l{i}"])
+            else:
+                xc, nc = xl.mlstm_apply(cfg, p[f"l{i}"],
+                                        lp[f"l{i}"] if lp else None, xc,
+                                        cache=c[f"l{i}"])
+            ncs[f"l{i}"] = nc
+        return xc, ncs
+
+    x, new_periods = jax.lax.scan(
+        body, x, (params["periods"], lora["periods"] if lora else None,
+                  cache["periods"]))
+    x = apply_norm("layernorm", params["final_norm"], x)
+    return x @ params["head"].astype(x.dtype), {"periods": new_periods}

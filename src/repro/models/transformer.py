@@ -1,0 +1,218 @@
+"""Decoder-only LM covering the dense (llama/qwen/olmo) and MoE
+(grok / deepseek-v2-with-MLA) families.
+
+Layers are stacked and run under ``lax.scan`` (optionally rematerialized);
+MoE models may carry a leading block of dense layers (deepseek's first
+layer) which is unrolled in front of the scan.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common, moe as moe_lib, mla as mla_lib
+from repro.models.common import (apply_norm, apply_mlp, decoder_block,
+                                 block_specs, block_lora_specs, stack_specs)
+from repro.models.params import Spec
+
+
+# ---------------------------------------------------------------------------
+# specs
+# ---------------------------------------------------------------------------
+
+def _one_block_specs(cfg, *, use_moe: bool, d_ff: Optional[int] = None):
+    p = {"ln1": common.norm_specs(cfg.norm, cfg.d_model),
+         "ln2": common.norm_specs(cfg.norm, cfg.d_model)}
+    p["attn"] = mla_lib.mla_specs(cfg) if cfg.mla else common.attn_specs(cfg)
+    if use_moe:
+        p["moe"] = moe_lib.moe_specs(cfg)
+    else:
+        p["mlp"] = common.mlp_specs(cfg, d_ff)
+    return p
+
+
+def _one_block_lora_specs(cfg):
+    return {"attn": (mla_lib.mla_lora_specs(cfg) if cfg.mla
+                     else common.attn_lora_specs(cfg))}
+
+
+def _n_prefix(cfg) -> int:
+    return cfg.moe.first_dense_layers if cfg.moe else 0
+
+
+def lm_specs(cfg):
+    n_prefix = _n_prefix(cfg)
+    n_scan = cfg.num_layers - n_prefix
+    frozen = {
+        "embed": Spec((cfg.padded_vocab, cfg.d_model), ("vocab", "embed"), "embed"),
+        "blocks": stack_specs(n_scan, _one_block_specs(
+            cfg, use_moe=cfg.moe is not None)),
+        "final_norm": common.norm_specs(cfg.norm, cfg.d_model),
+    }
+    if n_prefix:
+        frozen["prefix"] = [
+            _one_block_specs(cfg, use_moe=False, d_ff=cfg.moe.dense_d_ff)
+            for _ in range(n_prefix)]
+    if not cfg.tie_embeddings:
+        frozen["head"] = Spec((cfg.d_model, cfg.padded_vocab), ("embed", "vocab"))
+    lora = {"blocks": stack_specs(n_scan, _one_block_lora_specs(cfg))}
+    if n_prefix:
+        lora["prefix"] = [_one_block_lora_specs(cfg) for _ in range(n_prefix)]
+    return {"frozen": frozen, "lora": lora}
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _block_apply(cfg, p, lp, x, *, positions, cache=None, window=0,
+                 chunk=2048, use_moe=False):
+    aux = jnp.zeros((), jnp.float32)
+    xn = apply_norm(cfg.norm, p["ln1"], x)
+    if cfg.mla:
+        if cache is not None:
+            h, new_cache = mla_lib.mla_decode(cfg, p["attn"],
+                                              lp["attn"] if lp else None, xn, cache)
+        else:
+            h = mla_lib.mla_full(cfg, p["attn"], lp["attn"] if lp else None,
+                                 xn, positions=positions, chunk=chunk)
+            new_cache = None
+    else:
+        h, new_cache = common.attn_apply(
+            cfg, p["attn"], lp["attn"] if lp else None, xn,
+            positions=positions, cache=cache, window=window, chunk=chunk)
+    x = x + h
+    xn = apply_norm(cfg.norm, p["ln2"], x)
+    if use_moe:
+        f, a = moe_lib.moe_apply(cfg, p["moe"], xn)
+        aux = aux + a
+    else:
+        f = apply_mlp(cfg, p["mlp"], xn)
+    return x + f, new_cache, aux
+
+
+def lm_forward(cfg, params, lora, tokens, *, window=0, chunk=2048,
+               remat=True, boundaries=None, channel=None):
+    """tokens: (B, S) -> logits (B, S, padded_vocab), aux loss.
+
+    ``boundaries=(b1, b2)`` + ``channel`` enable ELSA's tripartite split:
+    the layer scan is cut at blocks b1 and b1+b2 (Part 1 / Part 2 / Part 3)
+    and activations crossing each cut pass through ``channel``
+    (SS-OP ∘ sketch ∘ decode ∘ SS-OPᵀ) — exactly §III.B.2-3 mapped onto
+    the pod (DESIGN.md §3).
+    """
+    frozen = params
+    B, S = tokens.shape
+    x = jnp.take(frozen["embed"], tokens, axis=0).astype(cfg.adtype())
+    positions = jnp.arange(S)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    for i in range(_n_prefix(cfg)):
+        x, _, aux = _block_apply(
+            cfg, frozen["prefix"][i], lora["prefix"][i] if lora else None, x,
+            positions=positions, window=window, chunk=chunk, use_moe=False)
+        aux_total += aux
+
+    use_moe = cfg.moe is not None
+
+    def body(carry, pl):
+        xc, aux_acc = carry
+        p, lp = pl
+        y, _, aux = _block_apply(cfg, p, lp, xc, positions=positions,
+                                 window=window, chunk=chunk, use_moe=use_moe)
+        return (y, aux_acc + aux), None
+
+    if remat:
+        body = jax.checkpoint(body)
+
+    def seg_scan(carry, lo, hi):
+        sl = jax.tree_util.tree_map(lambda a: a[lo:hi], frozen["blocks"])
+        ll = (jax.tree_util.tree_map(lambda a: a[lo:hi], lora["blocks"])
+              if lora else None)
+        return jax.lax.scan(body, carry, (sl, ll))[0]
+
+    n_scan = cfg.num_layers - _n_prefix(cfg)
+    if boundaries and channel is not None:
+        b1, b2 = boundaries
+        (x, aux_total) = seg_scan((x, aux_total), 0, b1)
+        x = channel(x)                           # client -> edge cut
+        (x, aux_total) = seg_scan((x, aux_total), b1, b1 + b2)
+        x = channel(x)                           # edge -> client cut
+        (x, aux_total) = seg_scan((x, aux_total), b1 + b2, n_scan)
+    else:
+        (x, aux_total), _ = jax.lax.scan(
+            body, (x, aux_total),
+            (frozen["blocks"], lora["blocks"] if lora else None))
+
+    x = apply_norm(cfg.norm, frozen["final_norm"], x)
+    head = frozen.get("head", None)
+    if head is None:
+        logits = x @ frozen["embed"].T.astype(x.dtype)
+    else:
+        logits = x @ head.astype(x.dtype)
+    return logits, aux_total
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def lm_cache_specs(cfg, batch: int, seq_len: int):
+    n_prefix = _n_prefix(cfg)
+    n_scan = cfg.num_layers - n_prefix
+    if cfg.mla:
+        a = cfg.mla
+        one = {"c_kv": Spec((batch, seq_len, a.kv_lora_rank), ("batch", None, None)),
+               "k_rope": Spec((batch, seq_len, a.rope_head_dim), ("batch", None, None)),
+               "len": Spec((), (), "zeros", 1.0, "int32")}
+    else:
+        kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        window = cfg.sliding_window
+        ring = bool(window) and seq_len > window
+        s_cache = window if ring else seq_len
+        one = {"k": Spec((batch, s_cache, kv, hd), ("batch", None, "kv_heads", None)),
+               "v": Spec((batch, s_cache, kv, hd), ("batch", None, "kv_heads", None)),
+               "len": Spec((), (), "zeros", 1.0, "int32")}
+        if ring:
+            one["pos"] = Spec((s_cache,), (None,), "const", -1e9, "int32")
+    caches = {"blocks": stack_specs(n_scan, one)}
+    if n_prefix:
+        caches["prefix"] = [one for _ in range(n_prefix)]
+    return caches
+
+
+def lm_decode_step(cfg, params, lora, cache, tokens, *, window=0, chunk=4096):
+    """tokens: (B, 1); cache from lm_cache_specs -> (logits, new_cache)."""
+    frozen = params
+    x = jnp.take(frozen["embed"], tokens, axis=0).astype(cfg.adtype())
+    use_moe = cfg.moe is not None
+    new_prefix = []
+    for i in range(_n_prefix(cfg)):
+        c = cache["prefix"][i]
+        pos = c["len"] + jnp.arange(1)
+        x, nc, _ = _block_apply(cfg, frozen["prefix"][i],
+                                lora["prefix"][i] if lora else None, x,
+                                positions=pos, cache=c, window=window,
+                                chunk=chunk, use_moe=False)
+        new_prefix.append(nc)
+
+    def body(xc, pl):
+        p, lp, c = pl
+        pos = c["len"] + jnp.arange(1)
+        y, nc, _ = _block_apply(cfg, p, lp, xc, positions=pos, cache=c,
+                                window=window, chunk=chunk, use_moe=use_moe)
+        return y, nc
+
+    x, new_blocks = jax.lax.scan(
+        body, x, (frozen["blocks"], lora["blocks"] if lora else None,
+                  cache["blocks"]))
+    x = apply_norm(cfg.norm, frozen["final_norm"], x)
+    head = frozen.get("head", None)
+    logits = (x @ frozen["embed"].T.astype(x.dtype) if head is None
+              else x @ head.astype(x.dtype))
+    new_cache = {"blocks": new_blocks}
+    if new_prefix:
+        new_cache["prefix"] = new_prefix
+    return logits, new_cache

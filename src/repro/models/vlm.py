@@ -1,0 +1,137 @@
+"""Llama-3.2-Vision style VLM decoder [hf:meta-llama/Llama-3.2-11B-Vision]:
+self-attention blocks with gated cross-attention image layers every 5th
+block.  The vision tower is a STUB (assignment carve-out): the model
+consumes projected patch embeddings (B, num_vision_tokens, d_model).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.common import (apply_norm, apply_mlp, attn_apply,
+                                 gqa_attention, project, out_project,
+                                 stack_specs)
+from repro.models.params import Spec
+
+
+def _period(cfg) -> int:
+    return cfg.cross_attn_every
+
+
+def _n_periods(cfg) -> int:
+    assert cfg.num_layers % _period(cfg) == 0
+    return cfg.num_layers // _period(cfg)
+
+
+def _cross_block_specs(cfg):
+    return {"ln1": common.norm_specs(cfg.norm, cfg.d_model),
+            "attn": common.attn_specs(cfg),
+            "gate_attn": Spec((), (), "zeros"),
+            "ln2": common.norm_specs(cfg.norm, cfg.d_model),
+            "mlp": common.mlp_specs(cfg),
+            "gate_mlp": Spec((), (), "zeros")}
+
+
+def vlm_specs(cfg):
+    n_self = _period(cfg) - 1
+    period_p = {f"l{i}": common.block_specs(cfg) for i in range(n_self)}
+    period_p["cross"] = _cross_block_specs(cfg)
+    period_l = {f"l{i}": common.block_lora_specs(cfg) for i in range(n_self)}
+    period_l["cross"] = {"attn": common.attn_lora_specs(cfg)}
+    frozen = {
+        "embed": Spec((cfg.padded_vocab, cfg.d_model), ("vocab", "embed"), "embed"),
+        "periods": stack_specs(_n_periods(cfg), period_p),
+        "final_norm": common.norm_specs(cfg.norm, cfg.d_model),
+        "head": Spec((cfg.d_model, cfg.padded_vocab), ("embed", "vocab")),
+    }
+    return {"frozen": frozen,
+            "lora": {"periods": stack_specs(_n_periods(cfg), period_l)}}
+
+
+def _cross_block(cfg, p, lp, x, vision=None, kv_cache=None, chunk=2048):
+    ls = cfg.lora.alpha / cfg.lora.rank
+    xn = apply_norm(cfg.norm, p["ln1"], x)
+    q = project(p["attn"], lp["attn"] if lp else None, xn, "q", ls)
+    if kv_cache is not None:
+        k, v = kv_cache["ck"], kv_cache["cv"]
+    else:
+        k = project(p["attn"], lp["attn"] if lp else None, vision, "k", ls)
+        v = project(p["attn"], lp["attn"] if lp else None, vision, "v", ls)
+    o = gqa_attention(q, k, v, causal=False, chunk=chunk)
+    h = out_project(p["attn"], lp["attn"] if lp else None, o, x, ls)
+    x = x + jnp.tanh(p["gate_attn"].astype(x.dtype)) * h
+    f = apply_mlp(cfg, p["mlp"], apply_norm(cfg.norm, p["ln2"], x))
+    return x + jnp.tanh(p["gate_mlp"].astype(x.dtype)) * f
+
+
+def _self_layers(cfg, p, lp, x, *, positions, caches=None, chunk=2048):
+    n_self = _period(cfg) - 1
+    new = {}
+    for i in range(n_self):
+        xn = x
+        y, nc = common.decoder_block(
+            cfg, p[f"l{i}"], lp[f"l{i}"] if lp else None, xn,
+            positions=positions,
+            cache=caches[f"l{i}"] if caches else None, chunk=chunk)
+        x = y
+        if caches is not None:
+            new[f"l{i}"] = nc
+    return x, new
+
+
+def vlm_forward(cfg, params, lora, tokens, vision, *, remat=True,
+                chunk=2048, **_):
+    """tokens (B,S), vision (B,Nv,D) stub embeddings -> logits."""
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.adtype())
+    vision = vision.astype(cfg.adtype())
+    positions = jnp.arange(S)
+
+    def body(xc, pl):
+        p, lp = pl
+        xc, _ = _self_layers(cfg, p, lp, xc, positions=positions, chunk=chunk)
+        xc = _cross_block(cfg, p["cross"], lp["cross"] if lp else None, xc,
+                          vision=vision, chunk=chunk)
+        return xc, None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, (params["periods"],
+                                  lora["periods"] if lora else None))
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    return x @ params["head"].astype(x.dtype), jnp.zeros((), jnp.float32)
+
+
+def vlm_cache_specs(cfg, batch: int, seq_len: int):
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    n_self = _period(cfg) - 1
+    per = {f"l{i}": {
+        "k": Spec((batch, seq_len, kv, hd), ("batch", None, "kv_heads", None)),
+        "v": Spec((batch, seq_len, kv, hd), ("batch", None, "kv_heads", None)),
+        "len": Spec((), (), "zeros", 1.0, "int32")} for i in range(n_self)}
+    per["cross"] = {"ck": Spec((batch, cfg.num_vision_tokens, kv, hd),
+                               ("batch", None, "kv_heads", None)),
+                    "cv": Spec((batch, cfg.num_vision_tokens, kv, hd),
+                               ("batch", None, "kv_heads", None))}
+    return {"periods": stack_specs(_n_periods(cfg), per)}
+
+
+def vlm_decode_step(cfg, params, lora, cache, tokens, *, chunk=4096, **_):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.adtype())
+
+    def body(xc, pl):
+        p, lp, c = pl
+        pos = c["l0"]["len"] + jnp.arange(1)
+        xc, new = _self_layers(cfg, p, lp, xc, positions=pos, caches=c,
+                               chunk=chunk)
+        xc = _cross_block(cfg, p["cross"], lp["cross"] if lp else None, xc,
+                          kv_cache=c["cross"], chunk=chunk)
+        new["cross"] = c["cross"]
+        return xc, new
+
+    x, new_periods = jax.lax.scan(
+        body, x, (params["periods"], lora["periods"] if lora else None,
+                  cache["periods"]))
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    return x @ params["head"].astype(x.dtype), {"periods": new_periods}

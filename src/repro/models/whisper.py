@@ -1,0 +1,183 @@
+"""Whisper-small backbone [arXiv:2212.04356]: 12-layer bidirectional audio
+encoder + 12-layer decoder with cross-attention.
+
+The mel + conv frontend is a STUB (assignment carve-out): the model consumes
+pre-computed frame embeddings (B, num_audio_frames, d_model).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.common import (apply_norm, apply_mlp, attn_apply,
+                                 gqa_attention, project, out_project,
+                                 stack_specs)
+from repro.models.params import Spec
+
+
+def _enc_block_specs(cfg):
+    return {"ln1": common.norm_specs(cfg.norm, cfg.d_model),
+            "attn": common.attn_specs(cfg),
+            "ln2": common.norm_specs(cfg.norm, cfg.d_model),
+            "mlp": common.mlp_specs(cfg)}
+
+
+def _dec_block_specs(cfg):
+    return {"ln1": common.norm_specs(cfg.norm, cfg.d_model),
+            "self": common.attn_specs(cfg),
+            "ln_x": common.norm_specs(cfg.norm, cfg.d_model),
+            "cross": common.attn_specs(cfg),
+            "ln2": common.norm_specs(cfg.norm, cfg.d_model),
+            "mlp": common.mlp_specs(cfg)}
+
+
+def _dec_lora_specs(cfg):
+    return {"self": common.attn_lora_specs(cfg),
+            "cross": common.attn_lora_specs(cfg)}
+
+
+def whisper_specs(cfg):
+    d = cfg.d_model
+    frozen = {
+        "embed": Spec((cfg.padded_vocab, d), ("vocab", "embed"), "embed"),
+        "pos": Spec((cfg.max_position_embeddings, d), (None, "embed"), "embed"),
+        "enc_pos": Spec((cfg.num_audio_frames, d), (None, "embed"), "embed"),
+        "enc_blocks": stack_specs(cfg.encoder_layers, _enc_block_specs(cfg)),
+        "enc_norm": common.norm_specs(cfg.norm, d),
+        "dec_blocks": stack_specs(cfg.num_layers, _dec_block_specs(cfg)),
+        "dec_norm": common.norm_specs(cfg.norm, d),
+    }
+    lora = {
+        "enc_blocks": stack_specs(cfg.encoder_layers,
+                                  {"attn": common.attn_lora_specs(cfg)}),
+        "dec_blocks": stack_specs(cfg.num_layers, _dec_lora_specs(cfg)),
+    }
+    return {"frozen": frozen, "lora": lora}
+
+
+def _cross_apply(cfg, p, lp, x, enc_out=None, kv_cache=None, chunk=2048):
+    ls = cfg.lora.alpha / cfg.lora.rank
+    q = project(p, lp, x, "q", ls)
+    if kv_cache is not None:
+        k, v = kv_cache["ck"], kv_cache["cv"]
+    else:
+        k = project(p, lp, enc_out, "k", ls)
+        v = project(p, lp, enc_out, "v", ls)
+    o = gqa_attention(q, k, v, causal=False, chunk=chunk)
+    return out_project(p, lp, o, x, ls)
+
+
+def encode(cfg, params, lora, frames, *, remat=True, chunk=2048):
+    """frames: (B, F, D) stub embeddings -> encoder output (B, F, D)."""
+    x = frames.astype(cfg.adtype()) + params["enc_pos"][None].astype(cfg.adtype())
+    positions = jnp.arange(frames.shape[1])
+
+    def body(xc, pl):
+        p, lp = pl
+        h, _ = attn_apply(cfg, p["attn"], lp["attn"] if lp else None,
+                          apply_norm(cfg.norm, p["ln1"], xc),
+                          positions=positions, causal=False, chunk=chunk)
+        xc = xc + h
+        xc = xc + apply_mlp(cfg, p["mlp"], apply_norm(cfg.norm, p["ln2"], xc))
+        return xc, None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, (params["enc_blocks"],
+                                  lora["enc_blocks"] if lora else None))
+    return apply_norm(cfg.norm, params["enc_norm"], x)
+
+
+def _dec_block(cfg, p, lp, x, enc_out, *, positions, cache=None, chunk=2048):
+    h, nc = attn_apply(cfg, p["self"], lp["self"] if lp else None,
+                       apply_norm(cfg.norm, p["ln1"], x),
+                       positions=positions,
+                       cache=cache["self"] if cache else None, chunk=chunk)
+    x = x + h
+    x = x + _cross_apply(cfg, p["cross"], lp["cross"] if lp else None,
+                         apply_norm(cfg.norm, p["ln_x"], x), enc_out=enc_out,
+                         kv_cache=cache["cross"] if cache else None,
+                         chunk=chunk)
+    x = x + apply_mlp(cfg, p["mlp"], apply_norm(cfg.norm, p["ln2"], x))
+    return x, ({"self": nc, "cross": cache["cross"]} if cache else None)
+
+
+def whisper_forward(cfg, params, lora, tokens, frames, *, remat=True,
+                    chunk=2048, **_):
+    """Training/prefill: tokens (B,S) + frames (B,F,D) -> logits."""
+    enc_out = encode(cfg, params, lora, frames, remat=remat, chunk=chunk)
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.adtype())
+    x = x + params["pos"][:S][None].astype(x.dtype)
+    positions = jnp.arange(S)
+
+    def body(xc, pl):
+        p, lp = pl
+        y, _ = _dec_block(cfg, p, lp, xc, enc_out, positions=positions,
+                          chunk=chunk)
+        return y, None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, (params["dec_blocks"],
+                                  lora["dec_blocks"] if lora else None))
+    x = apply_norm(cfg.norm, params["dec_norm"], x)
+    return x @ params["embed"].T.astype(x.dtype), jnp.zeros((), jnp.float32)
+
+
+def whisper_cache_specs(cfg, batch: int, seq_len: int):
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    one = {
+        "self": {"k": Spec((batch, seq_len, kv, hd), ("batch", None, "kv_heads", None)),
+                 "v": Spec((batch, seq_len, kv, hd), ("batch", None, "kv_heads", None)),
+                 "len": Spec((), (), "zeros", 1.0, "int32")},
+        "cross": {"ck": Spec((batch, cfg.num_audio_frames, kv, hd),
+                             ("batch", None, "kv_heads", None)),
+                  "cv": Spec((batch, cfg.num_audio_frames, kv, hd),
+                             ("batch", None, "kv_heads", None))},
+    }
+    return {"dec_blocks": stack_specs(cfg.num_layers, one)}
+
+
+def whisper_prefill_cache(cfg, params, lora, frames, batch: int, seq_len: int):
+    """Build a decode cache with the cross k/v computed from the encoder."""
+    enc_out = encode(cfg, params, lora, frames, remat=False)
+    ls = cfg.lora.alpha / cfg.lora.rank
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+
+    def per_layer(p, lp):
+        ck = project(p["cross"], lp["cross"] if lp else None, enc_out, "k", ls)
+        cv = project(p["cross"], lp["cross"] if lp else None, enc_out, "v", ls)
+        return ck, cv
+
+    cks, cvs = jax.vmap(per_layer, in_axes=(0, 0))(
+        params["dec_blocks"], lora["dec_blocks"] if lora else None)
+    L = cfg.num_layers
+    zeros_k = jnp.zeros((L, batch, seq_len, kv, hd), cfg.adtype())
+    return {"dec_blocks": {
+        "self": {"k": zeros_k, "v": zeros_k,
+                 "len": jnp.zeros((L,), jnp.int32)},
+        "cross": {"ck": cks.astype(cfg.adtype()), "cv": cvs.astype(cfg.adtype())},
+    }}
+
+
+def whisper_decode_step(cfg, params, lora, cache, tokens, *, chunk=4096, **_):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.adtype())
+
+    def body(xc, pl):
+        p, lp, c = pl
+        pos = c["self"]["len"] + jnp.arange(1)
+        y, nc = _dec_block(cfg, p, lp, xc, None, positions=pos, cache=c,
+                           chunk=chunk)
+        return y, nc
+
+    # add positional embedding once (shared absolute position)
+    pos0 = cache["dec_blocks"]["self"]["len"][0]
+    x = x + jax.lax.dynamic_slice_in_dim(params["pos"], pos0, 1, 0)[None, 0:1].astype(x.dtype)
+
+    x, new_blocks = jax.lax.scan(
+        body, x, (params["dec_blocks"], lora["dec_blocks"] if lora else None,
+                  cache["dec_blocks"]))
+    x = apply_norm(cfg.norm, params["dec_norm"], x)
+    return x @ params["embed"].T.astype(x.dtype), {"dec_blocks": new_blocks}

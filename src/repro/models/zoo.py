@@ -1,0 +1,161 @@
+"""Unified model-zoo interface.
+
+Every architecture family exposes the same five entry points through
+:func:`get_model`:
+
+- ``specs(cfg)``                      -> {'frozen': SpecTree, 'lora': SpecTree}
+- ``forward(cfg, frozen, lora, batch, **opts)`` -> (logits, aux)
+- ``cache_specs(cfg, batch, seq_len)``-> SpecTree for the decode cache
+- ``decode_step(cfg, frozen, lora, cache, tokens, **opts)``
+- ``input_specs(cfg, shape)``         -> dict of ShapeDtypeStruct model inputs
+
+plus ``loss`` (next-token CE with padded-vocab masking) and ``train_step``
+builders in :mod:`repro.launch.train`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.models import (transformer, hybrid, ssm_lm, whisper as whisper_mod,
+                          vlm as vlm_mod, bert as bert_mod)
+
+
+class Model(NamedTuple):
+    specs: Callable
+    forward: Callable            # (cfg, frozen, lora, batch, **opts)
+    cache_specs: Optional[Callable]
+    decode_step: Optional[Callable]
+
+
+def _lm_forward(cfg, frozen, lora, batch, **opts):
+    return transformer.lm_forward(cfg, frozen, lora, batch["tokens"], **opts)
+
+
+def _lm_decode(cfg, frozen, lora, cache, batch, **opts):
+    return transformer.lm_decode_step(cfg, frozen, lora, cache,
+                                      batch["tokens"], **opts)
+
+
+def _hybrid_forward(cfg, frozen, lora, batch, **opts):
+    return hybrid.hybrid_forward(cfg, frozen, lora, batch["tokens"], **opts)
+
+
+def _hybrid_decode(cfg, frozen, lora, cache, batch, **opts):
+    return hybrid.hybrid_decode_step(cfg, frozen, lora, cache,
+                                     batch["tokens"], **opts)
+
+
+def _xlstm_forward(cfg, frozen, lora, batch, **opts):
+    return ssm_lm.xlstm_forward(cfg, frozen, lora, batch["tokens"], **opts)
+
+
+def _xlstm_decode(cfg, frozen, lora, cache, batch, **opts):
+    return ssm_lm.xlstm_decode_step(cfg, frozen, lora, cache,
+                                    batch["tokens"], **opts)
+
+
+def _whisper_forward(cfg, frozen, lora, batch, **opts):
+    return whisper_mod.whisper_forward(cfg, frozen, lora, batch["tokens"],
+                                       batch["frames"], **opts)
+
+
+def _whisper_decode(cfg, frozen, lora, cache, batch, **opts):
+    return whisper_mod.whisper_decode_step(cfg, frozen, lora, cache,
+                                           batch["tokens"], **opts)
+
+
+def _vlm_forward(cfg, frozen, lora, batch, **opts):
+    return vlm_mod.vlm_forward(cfg, frozen, lora, batch["tokens"],
+                               batch["vision"], **opts)
+
+
+def _vlm_decode(cfg, frozen, lora, cache, batch, **opts):
+    return vlm_mod.vlm_decode_step(cfg, frozen, lora, cache,
+                                   batch["tokens"], **opts)
+
+
+def _bert_forward(cfg, frozen, lora, batch, **opts):
+    opts.pop("window", None)
+    opts.pop("chunk", None)
+    opts.pop("remat", None)
+    _, _, logits = bert_mod.bert_forward(cfg, frozen, lora, batch["tokens"],
+                                         **opts)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+_FAMILIES: Dict[str, Model] = {
+    "dense": Model(transformer.lm_specs, _lm_forward,
+                   transformer.lm_cache_specs, _lm_decode),
+    "moe": Model(transformer.lm_specs, _lm_forward,
+                 transformer.lm_cache_specs, _lm_decode),
+    "hybrid": Model(hybrid.hybrid_specs, _hybrid_forward,
+                    hybrid.hybrid_cache_specs, _hybrid_decode),
+    "ssm": Model(ssm_lm.xlstm_specs, _xlstm_forward,
+                 ssm_lm.xlstm_cache_specs, _xlstm_decode),
+    "audio": Model(whisper_mod.whisper_specs, _whisper_forward,
+                   whisper_mod.whisper_cache_specs, _whisper_decode),
+    "vlm": Model(vlm_mod.vlm_specs, _vlm_forward,
+                 vlm_mod.vlm_cache_specs, _vlm_decode),
+    "encoder": Model(bert_mod.bert_specs, _bert_forward, None, None),
+}
+
+
+def get_model(cfg: ArchConfig) -> Model:
+    return _FAMILIES[cfg.family]
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins for the dry-run)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ArchConfig, shape: InputShape) -> Dict[str, Any]:
+    """Model inputs for (arch, input-shape) as ShapeDtypeStructs."""
+    B = shape.global_batch
+    adt = cfg.adtype()
+    if shape.kind in ("train", "prefill"):
+        out = {"tokens": jax.ShapeDtypeStruct((B, shape.seq_len), jnp.int32)}
+        if cfg.family == "vlm":
+            out["vision"] = jax.ShapeDtypeStruct(
+                (B, cfg.num_vision_tokens, cfg.d_model), adt)
+        if cfg.family == "audio":
+            out["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.num_audio_frames, cfg.d_model), adt)
+        return out
+    # decode: one new token against a seq_len cache
+    return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+
+
+def loss_fn(cfg: ArchConfig, logits, tokens, aux=None):
+    """Next-token cross entropy with padded-vocab masking.
+
+    The gold logit is extracted with a one-hot contraction (not
+    ``take_along_axis``): a gather over the vocab-sharded logits would
+    force GSPMD to all-gather the full (B, S, V) tensor, while the one-hot
+    multiply-reduce partitions cleanly over the 'model' axis.
+    """
+    V = cfg.vocab_size
+    logits = logits[:, :-1, :].astype(jnp.float32)
+    targets = tokens[:, 1:]
+    vp = logits.shape[-1]
+    if vp > V:
+        neg = jnp.where(jnp.arange(vp) < V, 0.0, -1e30).astype(jnp.float32)
+        logits = logits + neg
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(targets, vp, dtype=jnp.float32)
+    gold = jnp.sum(logits * onehot, axis=-1)
+    loss = jnp.mean(lse - gold)
+    if aux is not None:
+        loss = loss + aux.astype(jnp.float32)
+    return loss
+
+
+def classification_loss(logits, labels):
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)

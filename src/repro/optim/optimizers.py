@@ -1,0 +1,133 @@
+"""Pure-JAX optimizers over parameter pytrees."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer:
+    """Interface: init(params) -> state; update(params, grads, state) ->
+    (new_params, new_state)."""
+
+    def init(self, params):
+        raise NotImplementedError
+
+    def update(self, params, grads, state):
+        raise NotImplementedError
+
+
+def _tmap(f, *trees):
+    return jax.tree_util.tree_map(f, *trees)
+
+
+@dataclasses.dataclass
+class SGD(Optimizer):
+    lr: float = 1e-2
+    momentum: float = 0.0
+
+    def init(self, params):
+        if self.momentum == 0.0:
+            return {"step": jnp.zeros((), jnp.int32)}
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": _tmap(jnp.zeros_like, params)}
+
+    def update(self, params, grads, state):
+        lr = self.lr
+        if self.momentum == 0.0:
+            new = _tmap(lambda p, g: p - lr * g.astype(p.dtype), params, grads)
+            return new, {"step": state["step"] + 1}
+        m = _tmap(lambda mm, g: self.momentum * mm + g.astype(mm.dtype),
+                  state["m"], grads)
+        new = _tmap(lambda p, mm: p - lr * mm.astype(p.dtype), params, m)
+        return new, {"step": state["step"] + 1, "m": m}
+
+
+@dataclasses.dataclass
+class AdamW(Optimizer):
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    schedule: Optional[Callable[[jnp.ndarray], jnp.ndarray]] = None
+
+    def init(self, params):
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": _tmap(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+                "v": _tmap(lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+    def update(self, params, grads, state):
+        step = state["step"] + 1
+        lr = self.lr if self.schedule is None else self.lr * self.schedule(step)
+        b1c = 1.0 - self.b1 ** step.astype(jnp.float32)
+        b2c = 1.0 - self.b2 ** step.astype(jnp.float32)
+        m = _tmap(lambda mm, g: self.b1 * mm + (1 - self.b1) * g.astype(jnp.float32),
+                  state["m"], grads)
+        v = _tmap(lambda vv, g: self.b2 * vv
+                  + (1 - self.b2) * jnp.square(g.astype(jnp.float32)),
+                  state["v"], grads)
+
+        def upd(p, mm, vv):
+            mh = mm / b1c
+            vh = vv / b2c
+            step_ = mh / (jnp.sqrt(vh) + self.eps)
+            if self.weight_decay:
+                step_ = step_ + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step_).astype(p.dtype)
+
+        new = _tmap(upd, params, m, v)
+        return new, {"step": step, "m": m, "v": v}
+
+
+@dataclasses.dataclass
+class FedProx(Optimizer):
+    """SGD with the FedProx proximal term mu/2 ||w - w_global||^2
+    [Li et al., MLSys 2020]: g <- g + mu (w - w_global)."""
+    lr: float = 1e-2
+    mu: float = 0.01
+
+    def init(self, params):
+        return {"step": jnp.zeros((), jnp.int32),
+                "anchor": _tmap(lambda p: p, params)}
+
+    def set_anchor(self, state, anchor):
+        return {**state, "anchor": anchor}
+
+    def update(self, params, grads, state):
+        new = _tmap(
+            lambda p, g, a: p - self.lr * (g.astype(p.dtype)
+                                           + self.mu * (p - a)),
+            params, grads, state["anchor"])
+        return new, {**state, "step": state["step"] + 1}
+
+
+@dataclasses.dataclass
+class FedAMS(Optimizer):
+    """Server-side adaptive aggregation with AMSGrad-style max-v
+    [Wang et al., ICML 2022].  ``update`` treats ``grads`` as the
+    pseudo-gradient (old_global - aggregated)."""
+    lr: float = 1.0
+    b1: float = 0.9
+    b2: float = 0.99
+    eps: float = 1e-3
+
+    def init(self, params):
+        z = _tmap(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return {"step": jnp.zeros((), jnp.int32), "m": z, "v": z,
+                "vmax": _tmap(lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+    def update(self, params, grads, state):
+        m = _tmap(lambda mm, g: self.b1 * mm + (1 - self.b1) * g.astype(jnp.float32),
+                  state["m"], grads)
+        v = _tmap(lambda vv, g: self.b2 * vv
+                  + (1 - self.b2) * jnp.square(g.astype(jnp.float32)),
+                  state["v"], grads)
+        vmax = _tmap(jnp.maximum, state["vmax"], v)
+        new = _tmap(lambda p, mm, vm:
+                    (p.astype(jnp.float32)
+                     - self.lr * mm / (jnp.sqrt(vm) + self.eps)).astype(p.dtype),
+                    params, m, vmax)
+        return new, {"step": state["step"] + 1, "m": m, "v": v, "vmax": vmax}

@@ -1,0 +1,1 @@
+from repro.serving.engine import GenerationRequest, ServingEngine  # noqa: F401

@@ -1,0 +1,151 @@
+"""Batched generation engine over the zoo decode path.
+
+Tick-synchronous static batching: requests queue up, a full batch is
+admitted at a tick boundary (left-aligned, prompts consumed token-by-token
+through the same jitted step that decodes — "piggyback prefill"), EOS /
+max-new-token termination per slot, throughput accounting.  Positions stay
+uniform across the batch (our KV caches carry one write cursor), which is
+what the decode dry-run shapes lower; per-slot cursors (continuous
+batching) are future work and would need per-element cache scatter.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import zoo
+from repro.models.params import init_tree
+
+
+@dataclasses.dataclass
+class GenerationRequest:
+    prompt: List[int]
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    # filled by the engine
+    request_id: int = -1
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    submitted_at: float = 0.0
+    finished_at: float = 0.0
+
+
+class ServingEngine:
+    """batch_size requests generate in lock-step; next batch starts when
+    every slot finishes (static batching)."""
+
+    def __init__(self, cfg: ArchConfig, params=None, *, batch_size: int = 4,
+                 max_len: int = 128, seed: int = 0, greedy: bool = True):
+        self.cfg = cfg
+        self.model = zoo.get_model(cfg)
+        if self.model.decode_step is None:
+            raise ValueError(f"{cfg.name} has no decode path")
+        self.batch_size = batch_size
+        self.max_len = max_len
+        if params is None:
+            params = init_tree(self.model.specs(cfg),
+                               jax.random.PRNGKey(seed), cfg.dtype())
+        self.frozen, self.lora = params["frozen"], params["lora"]
+        self.queue: deque = deque()
+        self._next_id = 0
+        self.stats = {"requests": 0, "tokens": 0, "ticks": 0,
+                      "decode_s": 0.0}
+
+        def step(frozen, lora, cache, tokens):
+            logits, new_cache = self.model.decode_step(
+                cfg, frozen, lora, cache, {"tokens": tokens},
+                window=cfg.sliding_window)
+            nxt = jnp.argmax(logits[:, -1, :cfg.vocab_size], axis=-1)
+            return nxt.astype(jnp.int32), new_cache
+
+        self._step = jax.jit(step)
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt: List[int], max_new_tokens: int = 16,
+               eos_id: Optional[int] = None) -> GenerationRequest:
+        req = GenerationRequest(prompt=list(prompt),
+                                max_new_tokens=max_new_tokens,
+                                eos_id=eos_id, request_id=self._next_id,
+                                submitted_at=time.time())
+        self._next_id += 1
+        self.queue.append(req)
+        return req
+
+    def _fresh_cache(self):
+        return init_tree(self.model.cache_specs(self.cfg, self.batch_size,
+                                                self.max_len),
+                         jax.random.PRNGKey(1), self.cfg.dtype())
+
+    # ------------------------------------------------------------------
+    def run_batch(self) -> List[GenerationRequest]:
+        """Admit up to batch_size queued requests and run them to
+        completion.  Returns the finished requests."""
+        batch: List[GenerationRequest] = []
+        while self.queue and len(batch) < self.batch_size:
+            batch.append(self.queue.popleft())
+        if not batch:
+            return []
+        b = self.batch_size
+        cache = self._fresh_cache()
+
+        prompts = [r.prompt for r in batch]
+        max_prompt = max(len(p) for p in prompts)
+        max_new = max(r.max_new_tokens for r in batch)
+        horizon = min(max_prompt + max_new, self.max_len)
+
+        cur = np.zeros((b,), np.int64)                # per-slot token index
+        tok = np.zeros((b, 1), np.int32)
+        for i, p in enumerate(prompts):
+            tok[i, 0] = p[0]
+        active = np.array([i < len(batch) for i in range(b)])
+
+        t0 = time.time()
+        for t in range(1, horizon):
+            nxt, cache = self._step(self.frozen, self.lora,
+                                    cache, jnp.asarray(tok))
+            nxt = np.asarray(nxt)
+            self.stats["ticks"] += 1
+            for i, r in enumerate(batch):
+                if not active[i]:
+                    continue
+                if t < len(r.prompt):
+                    tok[i, 0] = r.prompt[t]           # still consuming prompt
+                else:
+                    gen = int(nxt[i])
+                    r.output.append(gen)
+                    self.stats["tokens"] += 1
+                    tok[i, 0] = gen
+                    if ((r.eos_id is not None and gen == r.eos_id)
+                            or len(r.output) >= r.max_new_tokens):
+                        r.done = True
+                        r.finished_at = time.time()
+                        active[i] = False
+            if not active[: len(batch)].any():
+                break
+        self.stats["decode_s"] += time.time() - t0
+        for r in batch:
+            if not r.done:
+                r.done = True
+                r.finished_at = time.time()
+            self.stats["requests"] += 1
+        return batch
+
+    def run_until_drained(self) -> List[GenerationRequest]:
+        out: List[GenerationRequest] = []
+        while self.queue:
+            out.extend(self.run_batch())
+        return out
+
+    # ------------------------------------------------------------------
+    def throughput(self) -> Dict[str, float]:
+        dt = max(self.stats["decode_s"], 1e-9)
+        return {"tokens_per_s": self.stats["tokens"] / dt,
+                "requests": float(self.stats["requests"]),
+                "ticks": float(self.stats["ticks"])}

@@ -1,0 +1,119 @@
+"""Per-architecture smoke tests: reduced variant of every assigned arch,
+one forward / train step on CPU, output shapes + no NaNs, and
+prefill/decode equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED, get_config
+from repro.models import zoo
+from repro.models.params import init_tree, count_params
+from repro.optim import AdamW
+
+DECODELESS = {"encoder"}
+
+
+def _batch(cfg, key, b=2, s=16):
+    toks = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    batch = {"tokens": toks}
+    if cfg.family == "vlm":
+        batch["vision"] = jax.random.normal(
+            jax.random.PRNGKey(7), (b, cfg.num_vision_tokens, cfg.d_model))
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(
+            jax.random.PRNGKey(7), (b, cfg.num_audio_frames, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_config(arch).reduced()
+    assert cfg.num_layers <= 8 and cfg.d_model <= 512
+    if cfg.moe:
+        assert cfg.moe.num_experts <= 4
+    model = zoo.get_model(cfg)
+    params = init_tree(model.specs(cfg), jax.random.PRNGKey(0), jnp.float32)
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+
+    logits, aux = model.forward(cfg, params["frozen"], params["lora"],
+                                batch, remat=False)
+    assert logits.shape == (2, 16, cfg.padded_vocab)
+    assert not bool(jnp.isnan(logits).any())
+
+    # one LoRA train step: loss finite and decreases over 3 steps
+    opt = AdamW(lr=5e-3)
+    state = opt.init(params["lora"])
+    lora = params["lora"]
+
+    def loss_fn(lp):
+        lg, aux_ = model.forward(cfg, params["frozen"], lp, batch,
+                                 remat=False)
+        return zoo.loss_fn(cfg, lg, batch["tokens"], aux_)
+
+    losses = []
+    for _ in range(3):
+        loss, g = jax.value_and_grad(loss_fn)(lora)
+        lora, state = opt.update(lora, g, state)
+        losses.append(float(loss))
+    assert np.isfinite(losses).all()
+    assert losses[-1] < losses[0] + 1e-3
+
+
+@pytest.mark.parametrize("arch", [a for a in ASSIGNED
+                                  if get_config(a).family not in DECODELESS])
+def test_decode_matches_prefill(arch):
+    cfg = get_config(arch).reduced()
+    model = zoo.get_model(cfg)
+    params = init_tree(model.specs(cfg), jax.random.PRNGKey(0), jnp.float32)
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+    logits, _ = model.forward(cfg, params["frozen"], params["lora"], batch,
+                              remat=False)
+
+    cache = init_tree(model.cache_specs(cfg, 2, 16), jax.random.PRNGKey(2),
+                      jnp.float32)
+    if cfg.family == "audio":
+        from repro.models import whisper as wm
+        cache = wm.whisper_prefill_cache(cfg, params["frozen"],
+                                         params["lora"], batch["frames"],
+                                         2, 16)
+    if cfg.family == "vlm":
+        from repro.models import common as cm
+        ls = cfg.lora.alpha / cfg.lora.rank
+        def per(p, lp):
+            ck = cm.project(p["cross"]["attn"], lp["cross"]["attn"],
+                            batch["vision"], "k", ls)
+            cv = cm.project(p["cross"]["attn"], lp["cross"]["attn"],
+                            batch["vision"], "v", ls)
+            return ck, cv
+        cks, cvs = jax.vmap(per)(params["frozen"]["periods"],
+                                 params["lora"]["periods"])
+        cache["periods"]["cross"]["ck"] = cks
+        cache["periods"]["cross"]["cv"] = cvs
+
+    outs = []
+    c = cache
+    for t in range(6):
+        lg, c = model.decode_step(cfg, params["frozen"], params["lora"], c,
+                                  {"tokens": batch["tokens"][:, t:t + 1]})
+        outs.append(lg[:, 0])
+    dec = np.asarray(jnp.stack(outs, 1))
+    ref = np.asarray(logits[:, :6])
+    np.testing.assert_allclose(dec, ref, atol=5e-4, rtol=5e-3)
+
+
+def test_param_counts_full_configs():
+    """Full (non-reduced) configs should land near their nameplate sizes."""
+    expect = {"llama3-8b": (7.0e9, 9.0e9),
+              "grok-1-314b": (2.8e11, 3.4e11),
+              "deepseek-v2-236b": (2.0e11, 2.6e11),
+              "jamba-v0.1-52b": (4.3e10, 5.8e10),
+              # our mLSTM uses full (d_inner x d_inner) q/k/v projections
+              # (DESIGN.md §4 note); block-diagonal per-head would land at
+              # the 1.3B nameplate
+              "xlstm-1.3b": (1.0e9, 4.0e9),
+              "olmo-1b": (0.9e9, 1.5e9)}
+    for arch, (lo, hi) in expect.items():
+        cfg = get_config(arch)
+        n = count_params(zoo.get_model(cfg).specs(cfg)["frozen"])
+        assert lo < n < hi, f"{arch}: {n:.3e} outside [{lo:.1e}, {hi:.1e}]"

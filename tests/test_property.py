@@ -1,0 +1,104 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ssop as ssop_mod
+from repro.core.fingerprint import fingerprint, kl_gaussian, sym_kl
+from repro.core.sketch import _median, compress, decompress, make_plan
+from repro.core.splitting import SplitPolicy, split_for_client
+from repro.core.aggregation import fedavg
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+@settings(**SETTINGS)
+@given(st.integers(2, 16), st.integers(0, 2 ** 31 - 1))
+def test_random_orthogonal_is_orthogonal(r, seed):
+    v = ssop_mod.random_orthogonal(r, seed)
+    np.testing.assert_allclose(np.asarray(v.T @ v), np.eye(r), atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(st.integers(1, 8), st.integers(0, 1000), st.integers(8, 48))
+def test_ssop_inverse_exact(r, seed, d):
+    r = min(r, d)
+    rng = np.random.default_rng(seed)
+    j = jnp.asarray(rng.standard_normal((20, d)), jnp.float32)
+    so = ssop_mod.make_ssop(j, r, "salt", seed)
+    h = jnp.asarray(rng.standard_normal((5, d)), jnp.float32)
+    back = ssop_mod.apply_ssop_inverse(ssop_mod.apply_ssop(h, so), so)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(h), atol=2e-4)
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 500))
+def test_ssop_norm_preserving(seed):
+    rng = np.random.default_rng(seed)
+    j = jnp.asarray(rng.standard_normal((30, 32)), jnp.float32)
+    so = ssop_mod.make_ssop(j, 6, "s", seed)
+    h = jnp.asarray(rng.standard_normal((7, 32)), jnp.float32)
+    out = ssop_mod.apply_ssop(h, so)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(out), axis=-1),
+        np.linalg.norm(np.asarray(h), axis=-1), rtol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(st.integers(3, 9), st.integers(2, 6), st.integers(0, 100))
+def test_median_network_matches_numpy(y, d, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((y, d)), jnp.float32)
+    got = np.asarray(_median(x, axis=0))
+    np.testing.assert_allclose(got, np.median(np.asarray(x), axis=0),
+                               atol=1e-6)
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 100))
+def test_sketch_unbiased_over_plans(seed):
+    """E_plan[decompress(compress(h))] ≈ h (count-sketch unbiasedness).
+
+    Y=1 (mean == median) so the estimator is exactly unbiased; per-plan
+    std with 4 colliding dims is ~1.7, so the MEAN error over n plans is
+    bounded statistically, not tightly."""
+    rng = np.random.default_rng(seed)
+    h = jnp.asarray(rng.standard_normal((1, 32)), jnp.float32)
+    est = np.zeros((1, 32))
+    n = 600
+    for i in range(n):
+        plan = make_plan(32, 1, 8, seed=seed * 1000 + i)
+        est += np.asarray(decompress(compress(h, plan), plan))
+    # per-coord std ≈ sqrt(3)/sqrt(600) ≈ 0.07; 5-sigma over 32 coords
+    err = np.abs(est / n - np.asarray(h)).max()
+    assert err < 0.40, err
+
+
+@settings(**SETTINGS)
+@given(st.floats(1e6, 1e12), st.floats(1e5, 1e9))
+def test_split_always_valid(h, bw):
+    pol = SplitPolicy(num_blocks=12, o_fix=2, p_min=1, p_max=6)
+    p, q, o = split_for_client(h, bw, 1e12, 1e9, pol)
+    assert p + q + o == 12 and 1 <= p <= 6 and q >= 4 and o == 2
+
+
+@settings(**SETTINGS)
+@given(st.lists(st.floats(0.1, 10.0), min_size=2, max_size=5))
+def test_fedavg_convexity(weights):
+    """FedAvg output lies within the convex hull of inputs."""
+    trees = [{"w": jnp.full(3, float(i))} for i in range(len(weights))]
+    out = fedavg(trees, weights)
+    w = np.asarray(out["w"])
+    assert (w >= 0 - 1e-5).all() and (w <= len(weights) - 1 + 1e-5).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 50))
+def test_kl_nonnegative(seed):
+    rng = np.random.default_rng(seed)
+    a = fingerprint(jnp.asarray(rng.standard_normal((40, 6)), jnp.float32))
+    b = fingerprint(jnp.asarray(
+        rng.standard_normal((40, 6)) * 2 + 1, jnp.float32))
+    assert float(kl_gaussian(a, b)) >= -1e-4
+    assert float(sym_kl(a, b)) >= -1e-4

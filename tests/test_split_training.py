@@ -1,0 +1,100 @@
+"""Tripartite split training invariants (§III.B.2–3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.sketch import make_plan
+from repro.core.split_training import (Channel, IDENTITY_CHANNEL, Split,
+                                       split_forward, split_loss)
+from repro.core.ssop import make_ssop
+from repro.models import bert as bert_mod
+from repro.models.params import init_tree
+
+CFG = get_config("bert-base").reduced().with_(num_layers=6)
+
+
+def _setup():
+    tree = init_tree(bert_mod.bert_specs(CFG, 4), jax.random.PRNGKey(0),
+                     jnp.float32)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (4, 12), 0,
+                              CFG.vocab_size)
+    labels = jnp.array([0, 1, 2, 3])
+    return tree["frozen"], tree["lora"], toks, labels
+
+
+def test_split_equals_full_forward_without_channel():
+    frozen, lora, toks, _ = _setup()
+    _, full_cls, full_logits = bert_mod.bert_forward(CFG, frozen, lora, toks)
+    for split in [Split(1, 3, 2), Split(2, 2, 2), Split(3, 1, 2)]:
+        cls, logits, _, _ = split_forward(CFG, frozen, lora, toks, split,
+                                          IDENTITY_CHANNEL)
+        np.testing.assert_allclose(np.asarray(logits),
+                                   np.asarray(full_logits), atol=1e-5)
+
+
+def test_ssop_only_channel_is_exact():
+    """SS-OP without sketching is a perfect (rotate, un-rotate) channel."""
+    frozen, lora, toks, labels = _setup()
+    emb = jax.random.normal(jax.random.PRNGKey(3), (32, CFG.d_model))
+    ch = Channel(make_ssop(emb, 4, "salt", 0), None)
+    split = Split(2, 2, 2)
+    batch = {"tokens": toks, "labels": labels}
+    l_id = float(split_loss(CFG, frozen, lora, batch, split,
+                            IDENTITY_CHANNEL))
+    l_ch = float(split_loss(CFG, frozen, lora, batch, split, ch))
+    assert abs(l_id - l_ch) < 1e-4
+
+
+def test_exact_gradient_restoration_through_ssop():
+    """Backward through the orthogonal channel == backward without it
+    (paper's 'training remains stable' property)."""
+    frozen, lora, toks, labels = _setup()
+    emb = jax.random.normal(jax.random.PRNGKey(3), (32, CFG.d_model))
+    ch = Channel(make_ssop(emb, 4, "salt", 0), None)
+    split = Split(2, 2, 2)
+    batch = {"tokens": toks, "labels": labels}
+    g_id = jax.grad(lambda lp: split_loss(CFG, frozen, lp, batch, split,
+                                          IDENTITY_CHANNEL))(lora)
+    g_ch = jax.grad(lambda lp: split_loss(CFG, frozen, lp, batch, split,
+                                          ch))(lora)
+    # exact in exact arithmetic; fp32 rotation noise amplifies through the
+    # stack, so compare relative to each leaf's gradient scale
+    for a, b in zip(jax.tree_util.tree_leaves(g_id),
+                    jax.tree_util.tree_leaves(g_ch)):
+        scale = max(float(jnp.abs(a).max()), 1e-3)
+        assert float(jnp.abs(a - b).max()) / scale < 2e-2
+
+
+def test_lossy_channel_still_trains():
+    frozen, lora, toks, labels = _setup()
+    emb = jax.random.normal(jax.random.PRNGKey(3), (32, CFG.d_model))
+    plan = make_plan(CFG.d_model, 3, CFG.d_model // 2, seed=2)
+    ch = Channel(make_ssop(emb, 4, "salt", 0), plan)
+    split = Split(2, 2, 2)
+    batch = {"tokens": toks, "labels": labels}
+    g_fn = jax.jit(jax.value_and_grad(
+        lambda lp: split_loss(CFG, frozen, lp, batch, split, ch)))
+    losses = []
+    lora2 = lora
+    for _ in range(8):
+        lv, g = g_fn(lora2)
+        lora2 = jax.tree_util.tree_map(lambda p, gg: p - 0.01 * gg, lora2, g)
+        losses.append(float(lv))
+    assert np.isfinite(losses).all()
+    # lossy channel -> noisy steps; compare a tail average, not one sample
+    assert np.mean(losses[-3:]) < losses[0] + 0.02
+
+
+def test_transmitted_payload_is_compressed_and_rotated():
+    """What crosses the wire has sketch shape, and is NOT the raw hidden."""
+    frozen, lora, toks, _ = _setup()
+    emb = jax.random.normal(jax.random.PRNGKey(3), (32, CFG.d_model))
+    plan = make_plan(CFG.d_model, 3, CFG.d_model // 4, seed=2)
+    ch = Channel(make_ssop(emb, 8, "salt", 0), plan)
+    _, _, h_up, _ = split_forward(CFG, frozen, lora, toks, Split(2, 2, 2),
+                                  IDENTITY_CHANNEL)
+    wire = ch.transmit(h_up)
+    assert wire.shape == h_up.shape[:-1] + (3, CFG.d_model // 4)
+    # rho = D / (Y Z) > 1 => fewer floats on the wire
+    assert wire.size < h_up.size
