@@ -1,0 +1,58 @@
+"""One-global-round wall-clock: sequential reference vs batched engine.
+
+Times ``Federation.run`` for a single global round on the ISSUE's
+acceptance configuration — 20 clients, 4 local steps, reduced 4-layer
+BERT, CPU — with method ``fedavg`` (all clients in one group, dynamic
+splits and the SS-OP∘sketch channel active, no profiling phase) so the
+measurement isolates local split training + aggregation.  Each backend
+gets one warmup run first (compiles round functions, builds per-client
+channels), then the timed run; speedup = reference / batched.
+
+Writes ``BENCH_fed_round.json`` at the repo root via
+``benchmarks.common.write_json`` and prints the usual CSV line.
+"""
+import os
+import time
+
+from benchmarks.common import emit, write_json
+from repro.federation.simulation import FedConfig, Federation
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_fed_round.json")
+
+
+def _config(clients=20):
+    return dict(n_clients=clients, n_edges=4, alpha=0.1,
+                poisoned=(3, 8, 12, 17), total_examples=2000, probe_q=16,
+                local_warmup_steps=2, bert_layers=4, lr=5e-3, t_rounds=1,
+                batch_size=16)
+
+
+def _time_round(backend: str, steps: int, clients: int) -> float:
+    fed = Federation(FedConfig(**_config(clients)), backend=backend)
+    fed.run("fedavg", global_rounds=1, steps_per_round=steps)   # warmup
+    t0 = time.perf_counter()
+    fed.run("fedavg", global_rounds=1, steps_per_round=steps)
+    return time.perf_counter() - t0
+
+
+def run(steps: int = 4, clients: int = 20):
+    t_batched = _time_round("batched", steps, clients)
+    t_reference = _time_round("reference", steps, clients)
+    speedup = t_reference / t_batched
+    payload = {
+        "config": {"clients": clients, "steps_per_round": steps,
+                   "bert_layers": 4, "t_rounds": 1, "batch_size": 16,
+                   "method": "fedavg", "device": "cpu"},
+        "reference_s": round(t_reference, 3),
+        "batched_s": round(t_batched, 3),
+        "speedup": round(speedup, 2),
+    }
+    write_json(os.path.abspath(OUT_PATH), payload)
+    emit("fed_round_reference", t_reference * 1e6, f"{clients}x{steps}steps")
+    emit("fed_round_batched", t_batched * 1e6, f"speedup={speedup:.2f}x")
+    return payload
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,4 +1,5 @@
-"""Shared benchmark helpers: timing + CSV emission."""
+"""Shared benchmark helpers: timing + CSV/JSON emission."""
+import json
 import time
 
 
@@ -14,3 +15,10 @@ def timeit(fn, *args, repeats=3, warmup=1, **kw):
 
 def emit(name: str, us_per_call: float, derived):
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def write_json(path: str, payload: dict):
+    """Persist a benchmark record (BENCH_*.json) for CI / regression diff."""
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")

@@ -13,6 +13,7 @@ BENCHES = [
     ("table6_privacy", "benchmarks.bench_privacy"),
     ("kernels", "benchmarks.bench_kernels"),
     ("roofline", "benchmarks.bench_roofline"),
+    ("fed_round", "benchmarks.bench_fed_round"),
 ]
 
 

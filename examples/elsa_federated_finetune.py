@@ -3,10 +3,16 @@ dynamic-split LoRA fine-tuning through the SS-OP∘sketch channel ->
 coherence/trust-weighted cloud fusion, with checkpointing.
 
   PYTHONPATH=src python examples/elsa_federated_finetune.py \
-      [--rounds 10] [--clients 20] [--method elsa] [--full]
+      [--rounds 10] [--clients 20] [--method elsa] [--full] \
+      [--backend batched|reference]
 
 --full uses the paper's 20-client / 4-edge / BERT-8L setup (slow on CPU);
 the default is a reduced config that finishes in a few minutes.
+
+--backend batched (default) runs local training through the compiled
+vmap/scan federation engine (clients stacked per split bucket, one
+compiled round per configuration); --backend reference keeps the
+sequential one-client-at-a-time loop for comparison.
 """
 import argparse
 import os
@@ -26,6 +32,8 @@ def main():
     ap.add_argument("--edges", type=int, default=3)
     ap.add_argument("--alpha", type=float, default=0.1)
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--backend", default="batched",
+                    choices=["batched", "reference"])
     ap.add_argument("--out", default="runs/elsa_finetune")
     args = ap.parse_args()
 
@@ -39,7 +47,7 @@ def main():
                         total_examples=1500, probe_q=16,
                         local_warmup_steps=4, bert_layers=4, lr=2e-2,
                         t_rounds=1)
-    fed = Federation(cfg)
+    fed = Federation(cfg, backend=args.backend)
 
     print(f"== phase 1: profiling {cfg.n_clients} clients ==")
     div, trust, cres, _ = fed.profile_clients()
@@ -57,9 +65,11 @@ def main():
                    steps_per_round=args.steps, log=True)
 
     os.makedirs(args.out, exist_ok=True)
+    scalar_hist = {k: list(map(float, v)) if isinstance(v, list)
+                   else float(v) for k, v in hist.items()
+                   if isinstance(v, (list, int, float))}
     save(os.path.join(args.out, f"{args.method}_history.msgpack"),
-         {k: list(map(float, v)) if isinstance(v, list) else float(v)
-          for k, v in hist.items()})
+         scalar_hist)
     print(f"final accuracy: {hist['final_accuracy']:.4f} "
           f"(history -> {args.out})")
 

@@ -12,8 +12,10 @@ def fedavg(trees: Sequence, weights: Sequence[float]):
     """Weighted average of parameter pytrees."""
     if not trees:
         raise ValueError("fedavg: no trees to aggregate")
-    w = np.asarray(weights, np.float32)
-    w = w / max(w.sum(), 1e-12)
+    w = np.asarray(weights, np.float64)
+    # python-float (weak-typed) weights: full precision without
+    # upcasting f32 parameter leaves
+    w = [float(x) for x in w / max(w.sum(), 1e-12)]
     def avg(*leaves):
         out = leaves[0] * w[0]
         for wi, leaf in zip(w[1:], leaves[1:]):
@@ -44,16 +46,18 @@ def cloud_aggregate(edge_params: Dict[int, object],
     return fedavg([edge_params[k] for k in ks], weights)
 
 
+def _sq_norm(theta_new, theta_old) -> float:
+    return sum(
+        float(jnp.sum((a - b).astype(
+            jnp.promote_types(a.dtype, jnp.float32)) ** 2))
+        for a, b in zip(jax.tree_util.tree_leaves(theta_new),
+                        jax.tree_util.tree_leaves(theta_old)))
+
+
 def converged(theta_new, theta_old, xi: float) -> bool:
     """Eq. 16: ||theta_g - theta_{g-1}||_2 <= xi."""
-    sq = sum(float(jnp.sum((a - b).astype(jnp.float32) ** 2))
-             for a, b in zip(jax.tree_util.tree_leaves(theta_new),
-                             jax.tree_util.tree_leaves(theta_old)))
-    return float(np.sqrt(sq)) <= xi
+    return float(np.sqrt(_sq_norm(theta_new, theta_old))) <= xi
 
 
 def global_delta(theta_new, theta_old) -> float:
-    sq = sum(float(jnp.sum((a - b).astype(jnp.float32) ** 2))
-             for a, b in zip(jax.tree_util.tree_leaves(theta_new),
-                             jax.tree_util.tree_leaves(theta_old)))
-    return float(np.sqrt(sq))
+    return float(np.sqrt(_sq_norm(theta_new, theta_old)))

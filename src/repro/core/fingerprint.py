@@ -26,11 +26,12 @@ def fingerprint(embeddings: jnp.ndarray, ridge: float = 1e-3) -> Fingerprint:
     A ridge term keeps Sigma positive-definite when Q < D (the paper's
     Q=100 << D=768 regime necessarily yields a rank-deficient MLE).
     """
-    embeddings = embeddings.astype(jnp.float32)
+    acc = jnp.promote_types(embeddings.dtype, jnp.float32)
+    embeddings = embeddings.astype(acc)
     q, d = embeddings.shape
     mu = embeddings.mean(0)
     centered = embeddings - mu
-    sigma = (centered.T @ centered) / q + ridge * jnp.eye(d, dtype=jnp.float32)
+    sigma = (centered.T @ centered) / q + ridge * jnp.eye(d, dtype=acc)
     return Fingerprint(mu, sigma)
 
 

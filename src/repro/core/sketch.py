@@ -11,7 +11,7 @@ bit-identical in fp32.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -22,6 +22,10 @@ class SketchPlan(NamedTuple):
     bucket: jnp.ndarray    # (Y, D) int32 in [0, Z)
     sign: jnp.ndarray      # (Y, D) float32 in {-1, +1}
     z: int
+    # Dense signed-selection tensor S (Y, D, Z); precomputed by
+    # ``make_plan`` so compress/decompress (and their VJPs) never rebuild
+    # the D×Z one-hot per call.  ``None`` for hand-built plans.
+    selection: Optional[jnp.ndarray] = None
 
     @property
     def y(self) -> int:
@@ -37,17 +41,52 @@ class SketchPlan(NamedTuple):
         return self.d / (self.y * self.z)
 
 
+def _selection_from(bucket: jnp.ndarray, sign: jnp.ndarray,
+                    z: int) -> jnp.ndarray:
+    oh = jax.nn.one_hot(bucket, z, dtype=jnp.float32)           # (Y, D, Z)
+    return oh * sign[..., None]
+
+
+# typing.NamedTuple forbids overriding _replace in the class body, so the
+# sync-on-replace hook has to be patched onto the class after creation.
+_namedtuple_replace = SketchPlan._replace
+
+
+def _synced_replace(self, **kw):
+    """``_replace`` that keeps the cached selection tensor in sync when
+    the hash fields change (e.g. tests overriding ``bucket``)."""
+    new = _namedtuple_replace(self, **kw)
+    if (({"bucket", "sign", "z"} & kw.keys()) and "selection" not in kw
+            and self.selection is not None):
+        new = _namedtuple_replace(
+            new, selection=_selection_from(new.bucket, new.sign, new.z))
+    return new
+
+
+SketchPlan._replace = _synced_replace
+# Python 3.13+ copy.replace() dispatches through __replace__, which
+# namedtuple binds at class creation — patch it too so it can't bypass
+# the selection sync.
+SketchPlan.__replace__ = _synced_replace
+
+
 def make_plan(d: int, y: int, z: int, seed: int = 0) -> SketchPlan:
     rng = np.random.default_rng(seed)
     bucket = rng.integers(0, z, size=(y, d), dtype=np.int32)
     sign = rng.choice(np.array([-1.0, 1.0], np.float32), size=(y, d))
-    return SketchPlan(jnp.asarray(bucket), jnp.asarray(sign), z)
+    bucket, sign = jnp.asarray(bucket), jnp.asarray(sign)
+    return SketchPlan(bucket, sign, z, _selection_from(bucket, sign, z))
 
 
 def selection_matrices(plan: SketchPlan) -> jnp.ndarray:
-    """Dense signed-selection tensor S (Y, D, Z) for the MXU formulation."""
-    oh = jax.nn.one_hot(plan.bucket, plan.z, dtype=jnp.float32)  # (Y, D, Z)
-    return oh * plan.sign[..., None]
+    """Dense signed-selection tensor S (Y, D, Z) for the MXU formulation.
+
+    Returns the tensor cached on the plan when present (``make_plan``
+    precomputes it); falls back to building it for hand-rolled plans.
+    """
+    if plan.selection is not None:
+        return plan.selection
+    return _selection_from(plan.bucket, plan.sign, plan.z)
 
 
 def compress(h: jnp.ndarray, plan: SketchPlan, *, via_matmul: bool = True,
@@ -56,9 +95,9 @@ def compress(h: jnp.ndarray, plan: SketchPlan, *, via_matmul: bool = True,
     if use_kernel:
         from repro.kernels.count_sketch import ops as kops
         return kops.sketch_compress(h, plan)
-    hf = h.astype(jnp.float32)
+    hf = h.astype(jnp.promote_types(h.dtype, jnp.float32))
     if via_matmul:
-        s = selection_matrices(plan)                    # (Y, D, Z)
+        s = selection_matrices(plan)                    # (Y, D, Z) cached
         return jnp.einsum("...d,ydz->...yz", hf, s).astype(h.dtype)
     # scatter-add reference (per hash row)
     def one_row(yy):
@@ -76,7 +115,13 @@ def decompress(u: jnp.ndarray, plan: SketchPlan, *,
     if use_kernel:
         from repro.kernels.count_sketch import ops as kops
         return kops.sketch_decompress(u, plan)
-    uf = u.astype(jnp.float32)
+    uf = u.astype(jnp.promote_types(u.dtype, jnp.float32))
+    if plan.selection is not None:
+        # transposed selection matmul: est[..., y, d] = Σ_z u[..., y, z] ·
+        # S[y, d, z].  Exactly one non-zero per (y, d) row, so this is
+        # bit-identical to the gather below (adding exact fp32 zeros).
+        est = jnp.einsum("...yz,ydz->...yd", uf, plan.selection)
+        return _median(est, axis=-2).astype(u.dtype)
     # gather: est[y, d] = sign[y, d] * u[y, bucket[y, d]]
     ests = []
     for yy in range(plan.y):

@@ -19,7 +19,7 @@ import jax.numpy as jnp
 from repro.core.sketch import SketchPlan, compress, decompress
 from repro.core.ssop import SSOP, apply_ssop, apply_ssop_inverse
 from repro.models import bert as bert_mod
-from repro.models.zoo import classification_loss
+from repro.models.zoo import classification_loss, per_example_ce
 
 
 class Channel(NamedTuple):
@@ -86,11 +86,38 @@ def split_loss(cfg, frozen, lora, batch, split: Split,
     return classification_loss(logits, batch["labels"])
 
 
-def split_train_step(cfg, split: Split, channel: Channel, optimizer):
-    """Build a jittable (frozen, lora, opt_state, batch) -> ... step.
+def weighted_split_loss(cfg, frozen, lora, batch, split: Split,
+                        channel: Channel = IDENTITY_CHANNEL):
+    """``split_loss`` with per-example weights: Σ w_i ℓ_i / Σ w_i.
+
+    The batched federation engine pads ragged epoch-tail batches up to a
+    fixed batch size with zero-weight rows so every client shares one
+    compiled shape; zero weights zero the padded rows' loss AND gradient
+    contributions exactly, so a fully-weighted batch reproduces
+    ``split_loss`` bit-for-bit (examples are independent across the batch
+    axis — attention, layernorm, and the SS-OP∘sketch channel all act
+    per example).
+    """
+    _, logits, _, _ = split_forward(cfg, frozen, lora, batch["tokens"],
+                                    split, channel,
+                                    batch.get("mask_valid"))
+    per = per_example_ce(logits, batch["labels"])
+    w = batch["weights"].astype(per.dtype)
+    return jnp.sum(per * w) / jnp.sum(w)
+
+
+def split_train_step(cfg, split: Split, channel: Channel, optimizer, *,
+                     donate: bool = False):
+    """Build a compiled (frozen, lora, opt_state, batch) -> ... step.
 
     Gradients flow Part 3 -> channelᵀ -> Part 2 -> channelᵀ -> Part 1
-    automatically (the channel is linear).
+    automatically (the channel is linear).  The step is jit-compiled so
+    local training dispatches one executable per step instead of tracing
+    op-by-op.  ``donate=True`` additionally donates the lora/opt_state
+    buffers (in-place update on accelerators; skipped on CPU where XLA
+    has no donation) — callers must then not reuse the input arrays.
+    For whole-round compilation across a client population see
+    :mod:`repro.federation.engine`.
     """
     def step(frozen, lora, opt_state, batch):
         loss, grads = jax.value_and_grad(
@@ -98,4 +125,7 @@ def split_train_step(cfg, split: Split, channel: Channel, optimizer):
         )(lora)
         lora_new, opt_state = optimizer.update(lora, grads, opt_state)
         return lora_new, opt_state, loss
-    return step
+
+    donate_argnums = (1, 2) if donate and jax.default_backend() != "cpu" \
+        else ()
+    return jax.jit(step, donate_argnums=donate_argnums)

@@ -12,7 +12,7 @@ O(T·D·r) instead of O(T·D²).
 from __future__ import annotations
 
 import hashlib
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -22,6 +22,11 @@ import numpy as np
 class SSOP(NamedTuple):
     u: jnp.ndarray   # (D, r) orthonormal semantic basis
     v: jnp.ndarray   # (r, r) secret orthogonal rotation
+    # Fused update matrices, precomputed once per channel by ``make_ssop``
+    # so the forward (and its VJP) never re-materializes the r×r identity
+    # subtraction per call: w = Vᵀ - I, w_inv = V - I.
+    w: Optional[jnp.ndarray] = None
+    w_inv: Optional[jnp.ndarray] = None
 
 
 def semantic_subspace(j_matrix: jnp.ndarray, r: int) -> jnp.ndarray:
@@ -51,7 +56,8 @@ def make_ssop(j_matrix: jnp.ndarray, r: int, salt: str,
               client_id: int) -> SSOP:
     u = semantic_subspace(j_matrix, r)
     v = random_orthogonal(r, client_seed(salt, client_id))
-    return SSOP(u=u, v=v)
+    eye = jnp.eye(r, dtype=v.dtype)
+    return SSOP(u=u, v=v, w=v.T - eye, w_inv=v - eye)
 
 
 def apply_ssop(h: jnp.ndarray, ssop: SSOP, *, use_kernel: bool = False
@@ -59,19 +65,21 @@ def apply_ssop(h: jnp.ndarray, ssop: SSOP, *, use_kernel: bool = False
     """H -> H Q_nᵀ (rows are feature vectors).  Fused low-rank form."""
     if use_kernel:
         from repro.kernels.ssop import ops as kops
-        return kops.ssop_apply(h, ssop.u, ssop.v)
+        return kops.ssop_apply(h, ssop.u, ssop.v, w=ssop.w)
     u = ssop.u.astype(h.dtype)
-    v = ssop.v.astype(h.dtype)
+    w = ssop.w if ssop.w is not None \
+        else ssop.v.T - jnp.eye(ssop.v.shape[0], dtype=ssop.v.dtype)
     proj = h @ u                                       # (..., r)
-    return h + (proj @ (v.T - jnp.eye(v.shape[0], dtype=h.dtype))) @ u.T
+    return h + (proj @ w.astype(h.dtype)) @ u.T
 
 
 def apply_ssop_inverse(h: jnp.ndarray, ssop: SSOP) -> jnp.ndarray:
     """H -> H Q_n (the exact inverse; Q orthogonal)."""
     u = ssop.u.astype(h.dtype)
-    v = ssop.v.astype(h.dtype)
+    w = ssop.w_inv if ssop.w_inv is not None \
+        else ssop.v - jnp.eye(ssop.v.shape[0], dtype=ssop.v.dtype)
     proj = h @ u
-    return h + (proj @ (v - jnp.eye(v.shape[0], dtype=h.dtype))) @ u.T
+    return h + (proj @ w.astype(h.dtype)) @ u.T
 
 
 def q_matrix(ssop: SSOP) -> jnp.ndarray:

@@ -1,7 +1,15 @@
-"""Batching / shuffling pipeline over client datasets."""
+"""Batching / shuffling pipeline over client datasets.
+
+Besides the per-client epoch iterators, this module builds the
+pre-gathered batch *stacks* the batched federation engine scans over:
+``stack_padded_batches`` pulls ``steps`` batches per client, pads ragged
+epoch-tail batches to a fixed batch size with zero-weight rows, and
+stacks them to ``(steps, clients, batch, ...)`` device arrays so a whole
+local round is a single ``lax.scan`` over one compiled shape.
+"""
 from __future__ import annotations
 
-from typing import Iterator, Tuple
+from typing import Iterator, List, Sequence, Tuple
 
 import numpy as np
 
@@ -29,3 +37,54 @@ def infinite_batches(tokens: np.ndarray, labels: np.ndarray,
                                 seed=seed + epoch):
             yield b
         epoch += 1
+
+
+def pad_batch(tokens: np.ndarray, labels: np.ndarray, batch_size: int
+              ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Pad a ragged (b, S) batch to ``batch_size`` rows.
+
+    Returns (tokens, labels, weights) with weights 1.0 on real rows and
+    0.0 on padding; the weighted loss then matches the unpadded mean
+    exactly (padding contributes exact zeros).
+    """
+    b = len(tokens)
+    w = np.zeros(batch_size, np.float32)
+    w[:b] = 1.0
+    if b == batch_size:
+        return tokens, labels, w
+    pt = np.zeros((batch_size,) + tokens.shape[1:], tokens.dtype)
+    pl = np.zeros((batch_size,) + labels.shape[1:], labels.dtype)
+    pt[:b], pl[:b] = tokens, labels
+    return pt, pl, w
+
+
+def stack_padded_batches(per_client: Sequence[List[Tuple[np.ndarray,
+                                                         np.ndarray]]],
+                         batch_size: int
+                         ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Stack per-client batch sequences into scan-ready arrays.
+
+    ``per_client``: one list of ``steps`` (tokens, labels) batches per
+    client (already drawn from that client's iterator, preserving its
+    shuffle order).  Returns host arrays
+    ``tokens (steps, N, B, S) int32``, ``labels (steps, N, B) int32``,
+    ``weights (steps, N, B) float32`` — step axis leading so a
+    ``lax.scan`` over local steps consumes one (N, B, ...) slice per
+    iteration.
+    """
+    steps = len(per_client[0])
+    assert all(len(c) == steps for c in per_client), \
+        "all clients must contribute the same number of local steps"
+    toks, labs, wts = [], [], []
+    for s in range(steps):
+        trow, lrow, wrow = [], [], []
+        for client in per_client:
+            t, l, w = pad_batch(client[s][0], client[s][1], batch_size)
+            trow.append(t)
+            lrow.append(l)
+            wrow.append(w)
+        toks.append(np.stack(trow))
+        labs.append(np.stack(lrow))
+        wts.append(np.stack(wrow))
+    return (np.stack(toks).astype(np.int32), np.stack(labs).astype(np.int32),
+            np.stack(wts))

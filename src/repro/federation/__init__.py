@@ -1,1 +1,3 @@
+from repro.federation.engine import (BatchedEngine, broadcast_tree,
+                                     index_tree, stack_trees)  # noqa: F401
 from repro.federation.simulation import Federation, FedConfig  # noqa: F401

@@ -5,6 +5,15 @@ fingerprinting on a public probe set, trust scoring, latency-aware spectral
 clustering, per-client dynamic splits, split training through the
 SS-OP∘sketch channel, edge FedAvg, and coherence/trust-weighted cloud
 fusion with the Eq. 16 stopping rule.
+
+Two execution backends share this harness (``Federation(...,
+backend=...)``):
+
+- ``"batched"`` (default): the :mod:`repro.federation.engine` compiled
+  path — clients stacked along a leading axis, ``vmap``-ed gradient
+  steps, ``lax.scan`` over local steps, one host sync per round;
+- ``"reference"``: the original one-client-at-a-time eager loop, kept
+  bit-comparable for parity tests and as the benchmark baseline.
 """
 from __future__ import annotations
 
@@ -29,11 +38,12 @@ from repro.core.trust import trust_scores
 from repro.data.pipeline import infinite_batches
 from repro.data.probe import make_probe_set
 from repro.data.synthetic import SyntheticTaskConfig, make_federation_data, make_test_set
+from repro.federation.engine import BatchedEngine, stack_trees
 from repro.federation.topology import make_topology
 from repro.models import bert as bert_mod
 from repro.models.params import init_tree
 from repro.models.zoo import classification_loss
-from repro.optim import SGD, AdamW, FedProx, FedAMS
+from repro.optim import SGD, AdamW, FedProx, FedAMS, fedprox_gradient
 
 
 @dataclasses.dataclass
@@ -61,17 +71,29 @@ class FedConfig:
     use_channel: bool = True
     use_ssop: bool = True
     bert_layers: int = 8                 # reduced-BERT depth (tests: 4)
+    dtype: str = "float32"               # params+activations; parity tests
+                                         # use float64 (needs jax x64 mode)
 
 
 class Federation:
     """Simulation harness; ``run(method)`` with method in
     {'elsa', 'elsa-fixed', 'elsa-nocluster', 'fedavg', 'fedavg-random',
-    'fedprox', 'fedams', 'vanilla'}."""
+    'fedprox', 'fedams', 'vanilla'}.
 
-    def __init__(self, fed: FedConfig = FedConfig()):
+    ``backend="batched"`` runs local training through the compiled
+    vmap/scan engine; ``backend="reference"`` keeps the sequential eager
+    path (parity baseline).
+    """
+
+    def __init__(self, fed: FedConfig = FedConfig(),
+                 backend: str = "batched"):
+        if backend not in ("batched", "reference"):
+            raise ValueError(f"unknown backend {backend!r}")
+        self.backend = backend
         self.fed = fed
         self.cfg = get_config("bert-base").reduced().with_(
-            num_layers=fed.bert_layers)
+            num_layers=fed.bert_layers, param_dtype=fed.dtype,
+            activation_dtype=fed.dtype)
         self.task = SyntheticTaskConfig(vocab_size=self.cfg.vocab_size,
                                         num_classes=fed.num_classes,
                                         seq_len=24, seed=fed.seed)
@@ -90,7 +112,7 @@ class Federation:
 
         key = jax.random.PRNGKey(fed.seed)
         specs = bert_mod.bert_specs(self.cfg, fed.num_classes)
-        tree = init_tree(specs, key, jnp.float32)
+        tree = init_tree(specs, key, jnp.dtype(fed.dtype))
         self.frozen, self.lora0 = tree["frozen"], tree["lora"]
 
         d = self.cfg.d_model
@@ -99,13 +121,39 @@ class Federation:
 
         self._loss_grad_cache: Dict = {}
         self._channels: Dict[int, Channel] = {}
+        self._engine: Optional[BatchedEngine] = None
+        self._probe_fn = None
+        self._eval_fn = None
+
+    @property
+    def engine(self) -> BatchedEngine:
+        """Lazily-built compiled round executor (batched backend)."""
+        if self._engine is None:
+            self._engine = BatchedEngine(
+                self.cfg, self.frozen, self.plan, lr=self.fed.lr,
+                batch_size=self.fed.batch_size,
+                use_channel=self.fed.use_channel,
+                use_ssop=self.fed.use_ssop)
+        return self._engine
+
+    def _default_split(self) -> Split:
+        return Split(self.policy.p_max,
+                     self.cfg.num_layers - self.policy.p_max - 2, 2)
 
     # ------------------------------------------------------------------
-    def channel_for(self, client: int, lora) -> Channel:
+    def channel_for(self, client: int, lora, emb=None) -> Channel:
+        """Lazily build the client's SS-OP∘sketch channel.
+
+        ``emb`` lets callers share one probe forward across clients that
+        create their channels from the same lora (the probe embeddings
+        depend only on (lora, probe), not the client; only the seeded
+        V_n rotation is per-client).
+        """
         if not self.fed.use_channel:
             return Channel(None, None)
         if client not in self._channels:
-            emb = self._probe_embeddings(lora)
+            if emb is None:
+                emb = self._probe_embeddings(lora)
             ss = (make_ssop(emb, self.fed.ssop_r, "elsa-salt", client)
                   if self.fed.use_ssop else None)
             self._channels[client] = Channel(ss, self.plan)
@@ -117,8 +165,12 @@ class Federation:
         return cls
 
     # ------------------------------------------------------------------
-    def _grad_fn(self, split: Split, channel_key):
-        key = (split.p, split.q, split.o, channel_key)
+    def _grad_fn(self, client: int, split: Split):
+        # keyed on (client, split, use_ssop, use_channel) — NOT id(channel):
+        # id() of a collected Channel can be reused by a new object, which
+        # would silently pair a client with a stale cached loss
+        key = (client, split.p, split.q, split.o,
+               self.fed.use_ssop, self.fed.use_channel)
         if key not in self._loss_grad_cache:
             def loss(lora, batch, channel):
                 return split_loss(self.cfg, self.frozen, lora, batch, split,
@@ -128,48 +180,109 @@ class Federation:
 
     def client_steps(self, client: int, lora, n_steps: int,
                      it, use_split=True, prox_anchor=None):
-        """Run local training steps; returns (lora, mean loss)."""
+        """Run local training steps; returns (lora, mean loss).
+
+        Sequential reference path: eager autodiff, one host sync per
+        step.  The batched backend runs :meth:`group_steps` instead.
+        """
         fed = self.fed
         split = (Split(*self.splits[client]) if use_split
-                 else Split(self.policy.p_max, self.cfg.num_layers
-                            - self.policy.p_max - 2, 2))
+                 else self._default_split())
         channel = self.channel_for(client, lora)
-        gfn = self._grad_fn(split, id(channel))
+        gfn = self._grad_fn(client, split)
         losses = []
         for _ in range(n_steps):
             tok, lab = next(it)
             batch = {"tokens": jnp.asarray(tok), "labels": jnp.asarray(lab)}
             lv, g = gfn(lora, batch, channel)
             if prox_anchor is not None:
-                g = jax.tree_util.tree_map(
-                    lambda gg, p, a: gg + 0.01 * (p - a), g, lora, prox_anchor)
+                g = fedprox_gradient(g, lora, prox_anchor, 0.01)
             lora = jax.tree_util.tree_map(
                 lambda p, gg: p - fed.lr * gg, lora, g)
             losses.append(float(lv))
         return lora, float(np.mean(losses))
 
+    def group_steps(self, clients, theta, n_steps: int, iters,
+                    use_split=True, prox_anchor=None):
+        """Run one local round for a client group on the active backend.
+
+        Returns ``{client: (lora, mean loss)}``.  The batched backend
+        stacks the group per split bucket and runs the compiled
+        vmap/scan round; the reference backend loops ``client_steps``.
+        """
+        if self.backend != "batched":
+            return {n: self.client_steps(n, theta, n_steps, iters[n],
+                                         use_split=use_split,
+                                         prox_anchor=prox_anchor)
+                    for n in clients}
+        splits = {n: (Split(*self.splits[n]) if use_split
+                      else self._default_split()) for n in clients}
+        # all missing channels derive from the same theta -> one probe
+        # forward shared across clients instead of N identical ones
+        emb = None
+        if self.fed.use_channel and any(n not in self._channels
+                                        for n in clients):
+            emb = self._probe_embeddings(theta)
+        channels = {n: self.channel_for(n, theta, emb=emb) for n in clients}
+        batches = {n: [next(iters[n]) for _ in range(n_steps)]
+                   for n in clients}
+        return self.engine.run_clients(theta, clients, splits, channels,
+                                       batches, prox_anchor=prox_anchor)
+
     # ------------------------------------------------------------------
     def evaluate(self, lora) -> float:
-        _, _, logits = bert_mod.bert_forward(
-            self.cfg, self.frozen, lora, jnp.asarray(self.test_tokens))
+        if self._eval_fn is None:
+            # tokens stay an argument (not a closure) so XLA doesn't try
+            # to constant-fold the embedding of the whole test set
+            self._eval_fn = jax.jit(lambda lp, toks: bert_mod.bert_forward(
+                self.cfg, self.frozen, lp, toks)[2])
+        logits = self._eval_fn(lora, jnp.asarray(self.test_tokens))
         pred = np.asarray(jnp.argmax(logits, -1))
         return float((pred == self.test_labels).mean())
 
     # ------------------------------------------------------------------
+    def _batched_probe_embeddings(self, loras):
+        """Probe [CLS] embeddings for a list of lora trees: (N, Q, D)."""
+        if self._probe_fn is None:
+            self._probe_fn = jax.jit(jax.vmap(
+                lambda lp, toks: bert_mod.bert_forward(
+                    self.cfg, self.frozen, lp, toks)[1],
+                in_axes=(0, None)))
+        return self._probe_fn(stack_trees(loras), jnp.asarray(self.probe))
+
     def profile_clients(self):
-        """Phase 1: warmup locally, fingerprint, trust, cluster."""
+        """Phase 1: warmup locally, fingerprint, trust, cluster.
+
+        On the batched backend the warmup of all clients runs as one
+        compiled vmap/scan round (they share the default split) and the
+        probe forwards batch through a single vmapped jit call.
+        """
         fed = self.fed
+        iters = {n: infinite_batches(self.data[n].tokens,
+                                     self.data[n].labels, fed.batch_size,
+                                     seed=fed.seed + n)
+                 for n in range(fed.n_clients)}
+        clients = list(range(fed.n_clients))
         fps, norms, warm_loras = [], [], {}
-        for n in range(fed.n_clients):
-            it = infinite_batches(self.data[n].tokens, self.data[n].labels,
-                                  fed.batch_size, seed=fed.seed + n)
-            lora_n, _ = self.client_steps(n, self.lora0,
-                                          fed.local_warmup_steps, it,
-                                          use_split=False)
-            warm_loras[n] = lora_n
-            emb = self._probe_embeddings(lora_n)
-            fps.append(fingerprint(emb))
-            norms.append(np.asarray(jnp.linalg.norm(emb, axis=-1)))
+        if self.backend == "batched":
+            res = self.group_steps(clients, self.lora0,
+                                   fed.local_warmup_steps, iters,
+                                   use_split=False)
+            warm_loras = {n: res[n][0] for n in clients}
+            embs = self._batched_probe_embeddings(
+                [warm_loras[n] for n in clients])
+            for n in clients:
+                fps.append(fingerprint(embs[n]))
+                norms.append(np.asarray(jnp.linalg.norm(embs[n], axis=-1)))
+        else:
+            for n in clients:
+                lora_n, _ = self.client_steps(n, self.lora0,
+                                              fed.local_warmup_steps,
+                                              iters[n], use_split=False)
+                warm_loras[n] = lora_n
+                emb = self._probe_embeddings(lora_n)
+                fps.append(fingerprint(emb))
+                norms.append(np.asarray(jnp.linalg.norm(emb, axis=-1)))
         div = divergence_matrix(fps)
         trust = trust_scores(div, np.stack(norms))
         result = clus.cluster_clients(div, trust, self.topo.latency,
@@ -220,6 +333,8 @@ class Federation:
         server_opt = FedAMS(lr=1.0) if method == "fedams" else None
         server_state = server_opt.init(theta) if server_opt else None
 
+        client_losses: Dict[int, List[float]] = {n: []
+                                                 for n in range(fed.n_clients)}
         for g in range(global_rounds):
             edge_thetas, edge_alphas, losses = {}, {}, []
             for k, members in groups.items():
@@ -231,15 +346,17 @@ class Federation:
                     active = list(rng.choice(members, m, replace=False))
                 theta_k = theta
                 for _ in range(fed.t_rounds):
+                    res = self.group_steps(
+                        active, theta_k, steps_per_round, iters,
+                        use_split=use_split_dyn,
+                        prox_anchor=theta if method == "fedprox" else None)
                     locals_, weights = [], []
                     for n in active:
-                        lora_n, ls = self.client_steps(
-                            n, theta_k, steps_per_round, iters[n],
-                            use_split=use_split_dyn,
-                            prox_anchor=theta if method == "fedprox" else None)
+                        lora_n, ls = res[n]
                         locals_.append(lora_n)
                         weights.append(len(self.data[n].tokens))
                         losses.append(ls)
+                        client_losses[n].append(ls)
                     theta_k = agg.fedavg(locals_, weights)
                 edge_thetas[k] = theta_k
                 edge_alphas[k] = agg.edge_weight(
@@ -271,4 +388,6 @@ class Federation:
             if delta <= fed.xi:
                 break
         history["final_accuracy"] = history["accuracy"][-1]
+        history["client_losses"] = client_losses
+        self.last_theta = theta           # final aggregated LoRA (parity)
         return history

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels import resolve_interpret
+
 
 def _compress_kernel(h_ref, s_ref, o_ref, acc_ref, *, nd: int):
     di = pl.program_id(2)
@@ -38,8 +40,12 @@ def _compress_kernel(h_ref, s_ref, o_ref, acc_ref, *, nd: int):
 
 
 def sketch_compress_tz(h, s, *, bt: int = 256, bd: int = 512,
-                       interpret: bool = True):
-    """h: (T, D); s: (Y, D, Z) -> (T, Y, Z)."""
+                       interpret: bool | None = None):
+    """h: (T, D); s: (Y, D, Z) -> (T, Y, Z).
+
+    ``interpret=None`` -> backend-aware default (compiled on TPU).
+    """
+    interpret = resolve_interpret(interpret)
     T, D = h.shape
     Y, _, Z = s.shape
     bt = min(bt, T)
@@ -86,8 +92,12 @@ def _decompress_kernel(u_ref, s_ref, o_ref, *, y: int):
 
 
 def sketch_decompress_tz(u, s, *, bt: int = 256, bd: int = 512,
-                         interpret: bool = True):
-    """u: (T, Y, Z); s: (Y, D, Z) -> (T, D) median estimates."""
+                         interpret: bool | None = None):
+    """u: (T, Y, Z); s: (Y, D, Z) -> (T, D) median estimates.
+
+    ``interpret=None`` -> backend-aware default (compiled on TPU).
+    """
+    interpret = resolve_interpret(interpret)
     T, Y, Z = u.shape
     _, D, _ = s.shape
     bt = min(bt, T)

@@ -1,4 +1,10 @@
-"""jit'd wrappers binding SketchPlans to the count-sketch kernels."""
+"""jit'd wrappers binding SketchPlans to the count-sketch kernels.
+
+The signed-selection tensor comes from ``selection_matrices(plan)``,
+which returns the copy cached on the plan by ``make_plan`` (no per-call
+one-hot rebuild).  ``interpret=None`` resolves backend-aware; see
+``repro.kernels.set_interpret``.
+"""
 from __future__ import annotations
 
 import jax
@@ -14,7 +20,7 @@ def _flatten(h):
     return h.reshape(-1, h.shape[-1]), lead
 
 
-def sketch_compress(h, plan: SketchPlan, *, interpret: bool = True):
+def sketch_compress(h, plan: SketchPlan, *, interpret: bool | None = None):
     """h: (..., D) -> (..., Y, Z) via the Pallas MXU kernel."""
     s = selection_matrices(plan)
     flat, lead = _flatten(h)
@@ -22,7 +28,7 @@ def sketch_compress(h, plan: SketchPlan, *, interpret: bool = True):
     return out.reshape(lead + (plan.y, plan.z))
 
 
-def sketch_decompress(u, plan: SketchPlan, *, interpret: bool = True):
+def sketch_decompress(u, plan: SketchPlan, *, interpret: bool | None = None):
     """u: (..., Y, Z) -> (..., D)."""
     s = selection_matrices(plan)
     lead = u.shape[:-2]

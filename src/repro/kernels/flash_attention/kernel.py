@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels import resolve_interpret
+
 NEG_INF = -1e30
 
 
@@ -67,8 +69,13 @@ def _attn_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
 
 def flash_attention_bhsd(q, k, v, *, causal: bool = True, window: int = 0,
                          scale=None, bq: int = 512, bk: int = 512,
-                         interpret: bool = True):
-    """q: (BH, Sq, D); k, v: (BKV, Sk, D) with BH = BKV * G."""
+                         interpret: bool | None = None):
+    """q: (BH, Sq, D); k, v: (BKV, Sk, D) with BH = BKV * G.
+
+    ``interpret=None`` resolves backend-aware (compiled on TPU,
+    interpreter elsewhere); see :func:`repro.kernels.resolve_interpret`.
+    """
+    interpret = resolve_interpret(interpret)
     BH, Sq, D = q.shape
     BKV, Sk, _ = k.shape
     G = BH // BKV

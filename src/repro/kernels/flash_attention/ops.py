@@ -9,15 +9,26 @@ import jax.numpy as jnp
 from repro.kernels.flash_attention.kernel import flash_attention_bhsd
 
 
-@partial(jax.jit, static_argnames=("causal", "window", "q_offset",
-                                   "kv_valid", "bq", "bk", "interpret"))
 def flash_attention(q, k, v, *, causal=True, window=0, q_offset=0,
-                    kv_valid=None, bq=512, bk=512, interpret=True):
+                    kv_valid=None, bq=512, bk=512, interpret=None):
     """q: (B, Sq, H, Dh); k, v: (B, Sk, KV, Dh) -> (B, Sq, H, Dh).
 
     Training/prefill path (q_offset=0, full cache valid); decode uses the
     jnp online-softmax path in :mod:`repro.models.common`.
+    ``interpret=None`` -> backend-aware default (compiled on TPU).
+    Resolved *before* the jit boundary so ``set_interpret`` changes take
+    effect on the next call instead of being frozen into the jit cache.
     """
+    from repro.kernels import resolve_interpret
+    return _flash_attention(q, k, v, causal=causal, window=window,
+                            q_offset=q_offset, kv_valid=kv_valid, bq=bq,
+                            bk=bk, interpret=resolve_interpret(interpret))
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "q_offset",
+                                   "kv_valid", "bq", "bk", "interpret"))
+def _flash_attention(q, k, v, *, causal, window, q_offset, kv_valid,
+                     bq, bk, interpret):
     assert q_offset == 0 and kv_valid is None, \
         "flash kernel covers the train/prefill path"
     B, Sq, H, Dh = q.shape

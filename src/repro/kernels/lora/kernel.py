@@ -14,6 +14,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels import resolve_interpret
+
 
 def _lora_kernel(x_ref, w_ref, a_ref, b_ref, o_ref, acc_ref, accp_ref, *,
                  nk: int, scale: float):
@@ -39,8 +41,13 @@ def _lora_kernel(x_ref, w_ref, a_ref, b_ref, o_ref, acc_ref, accp_ref, *,
 
 
 def lora_matmul_td(x, w, a, b, scale: float, *, bt: int = 256,
-                   bo: int = 512, bk: int = 512, interpret: bool = True):
-    """x: (T, K); w: (K, O); a: (K, r); b: (r, O) -> (T, O)."""
+                   bo: int = 512, bk: int = 512,
+                   interpret: bool | None = None):
+    """x: (T, K); w: (K, O); a: (K, r); b: (r, O) -> (T, O).
+
+    ``interpret=None`` -> backend-aware default (compiled on TPU).
+    """
+    interpret = resolve_interpret(interpret)
     T, K = x.shape
     _, O = w.shape
     r = a.shape[1]

@@ -1,4 +1,8 @@
-"""jit'd wrapper for the fused LoRA matmul."""
+"""jit'd wrapper for the fused LoRA matmul.
+
+``interpret=None`` resolves backend-aware (compiled Mosaic on TPU, the
+Pallas interpreter elsewhere); see ``repro.kernels.set_interpret``.
+"""
 from __future__ import annotations
 
 import jax
@@ -6,7 +10,7 @@ import jax
 from repro.kernels.lora.kernel import lora_matmul_td
 
 
-def lora_matmul(x, w, a, b, scale: float, *, interpret: bool = True):
+def lora_matmul(x, w, a, b, scale: float, *, interpret: bool | None = None):
     """x: (..., K) -> (..., O): x W + s (x A) B fused."""
     lead = x.shape[:-1]
     flat = x.reshape(-1, x.shape[-1])

@@ -13,6 +13,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import resolve_interpret
+
 
 def _ssop_kernel(h_ref, u_ref, w_ref, o_ref):
     h = h_ref[...].astype(jnp.float32)            # (bt, D)
@@ -25,8 +27,13 @@ def _ssop_kernel(h_ref, u_ref, w_ref, o_ref):
     o_ref[...] = (h + upd).astype(o_ref.dtype)
 
 
-def ssop_apply_td(h, u, w, *, bt: int = 128, interpret: bool = True):
-    """h: (T, D); u: (D, r); w: (r, r) = Vᵀ - I  ->  H + (HU)WUᵀ."""
+def ssop_apply_td(h, u, w, *, bt: int = 128, interpret: bool | None = None):
+    """h: (T, D); u: (D, r); w: (r, r) = Vᵀ - I  ->  H + (HU)WUᵀ.
+
+    ``interpret=None`` -> backend-aware default (compiled on TPU,
+    interpreter elsewhere; :func:`repro.kernels.resolve_interpret`).
+    """
+    interpret = resolve_interpret(interpret)
     T, D = h.shape
     bt = min(bt, T)
     assert T % bt == 0

@@ -1,4 +1,12 @@
-"""jit'd wrapper for the SS-OP kernel: forward rotation and inverse."""
+"""jit'd wrapper for the SS-OP kernel: forward rotation and inverse.
+
+``interpret=None`` resolves backend-aware (compiled Mosaic on TPU, the
+Pallas interpreter elsewhere); override process-wide with
+``repro.kernels.set_interpret``.  When the caller already carries the
+fused update matrix ``w`` (``SSOP.w`` / ``SSOP.w_inv``, precomputed once
+per channel by ``make_ssop``) pass it directly to skip the per-call
+identity subtraction.
+"""
 from __future__ import annotations
 
 import jax
@@ -7,10 +15,11 @@ import jax.numpy as jnp
 from repro.kernels.ssop.kernel import ssop_apply_td
 
 
-def ssop_apply(h, u, v, *, interpret: bool = True):
+def ssop_apply(h, u, v, *, w=None, interpret=None):
     """H -> H Qᵀ = H + (HU)(Vᵀ - I)Uᵀ.  h: (..., D)."""
-    r = v.shape[0]
-    w = v.T - jnp.eye(r, dtype=v.dtype)
+    if w is None:
+        r = v.shape[0]
+        w = v.T - jnp.eye(r, dtype=v.dtype)
     lead = h.shape[:-1]
     flat = h.reshape(-1, h.shape[-1])
     out = ssop_apply_td(flat, u.astype(h.dtype), w.astype(h.dtype),
@@ -18,10 +27,11 @@ def ssop_apply(h, u, v, *, interpret: bool = True):
     return out.reshape(lead + (h.shape[-1],))
 
 
-def ssop_apply_inverse(h, u, v, *, interpret: bool = True):
+def ssop_apply_inverse(h, u, v, *, w=None, interpret=None):
     """H -> H Q = H + (HU)(V - I)Uᵀ (exact inverse, Q orthogonal)."""
-    r = v.shape[0]
-    w = v - jnp.eye(r, dtype=v.dtype)
+    if w is None:
+        r = v.shape[0]
+        w = v - jnp.eye(r, dtype=v.dtype)
     lead = h.shape[:-1]
     flat = h.reshape(-1, h.shape[-1])
     out = ssop_apply_td(flat, u.astype(h.dtype), w.astype(h.dtype),

@@ -90,16 +90,22 @@ def mlp_specs(cfg, d_ff: Optional[int] = None):
 # norms / activations / rotary
 # ---------------------------------------------------------------------------
 
+def _acc_dtype(x):
+    """Accumulation dtype: at least f32, but keep f64 inputs in f64 so
+    x64-mode parity runs are not silently re-quantized to f32."""
+    return jnp.promote_types(x.dtype, jnp.float32)
+
+
 def apply_norm(kind: str, p, x, eps: float = 1e-5):
-    xf = x.astype(jnp.float32)
+    xf = x.astype(_acc_dtype(x))
     if kind == "rmsnorm":
         y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
-        return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+        return (y * p["scale"].astype(xf.dtype)).astype(x.dtype)
     mean = jnp.mean(xf, -1, keepdims=True)
     var = jnp.mean(jnp.square(xf - mean), -1, keepdims=True)
     y = (xf - mean) * jax.lax.rsqrt(var + eps)
     if kind == "layernorm":
-        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+        y = y * p["scale"].astype(xf.dtype) + p["bias"].astype(xf.dtype)
     return y.astype(x.dtype)
 
 
@@ -181,12 +187,13 @@ def _chunked_attn_fwd_core(qr, ks, vs, kpos_chunks, q_pos, *, causal,
     """
     B, Sq, KV, G, Dh = qr.shape
     Dv = vs.shape[-1]
+    acc_dt = _acc_dtype(qr)
 
     def body(carry, inp):
         m_run, l_run, acc = carry
         kc, vc, k_pos = inp
         s = jnp.einsum("bqkgd,bskd->bkgqs", qr, kc,
-                       preferred_element_type=jnp.float32) * scale
+                       preferred_element_type=acc_dt) * scale
         msk = _mask(q_pos, k_pos, causal=causal, window=window,
                     kv_valid=kv_valid)
         s = jnp.where(msk[None, None, None], s, NEG_INF)
@@ -195,12 +202,12 @@ def _chunked_attn_fwd_core(qr, ks, vs, kpos_chunks, q_pos, *, causal,
         corr = jnp.exp(m_run - m_new)
         l_new = l_run * corr + p.sum(-1)
         acc_new = acc * corr[..., None] + jnp.einsum(
-            "bkgqs,bskd->bkgqd", p.astype(vc.dtype), vc).astype(jnp.float32)
+            "bkgqs,bskd->bkgqd", p.astype(vc.dtype), vc).astype(acc_dt)
         return (m_new, l_new, acc_new), None
 
-    m0 = jnp.full((B, KV, G, Sq), NEG_INF, jnp.float32)
-    l0 = jnp.zeros((B, KV, G, Sq), jnp.float32)
-    a0 = jnp.zeros((B, KV, G, Sq, Dv), jnp.float32)
+    m0 = jnp.full((B, KV, G, Sq), NEG_INF, acc_dt)
+    l0 = jnp.zeros((B, KV, G, Sq), acc_dt)
+    a0 = jnp.zeros((B, KV, G, Sq, Dv), acc_dt)
     (m_f, l_f, acc), _ = jax.lax.scan(body, (m0, l0, a0),
                                       (ks, vs, kpos_chunks))
     o = acc / jnp.maximum(l_f, 1e-30)[..., None]
@@ -240,24 +247,25 @@ def _chunked_attn_bwd(causal, window, scale, chunk, res, do):
     qr, ks, vs, o, m, l = res
     B, Sq, KV, G, Dh = qr.shape
     nc = ks.shape[0]
+    acc_dt = _acc_dtype(qr)
     q_pos = jnp.arange(Sq)
     l_safe = jnp.maximum(l, 1e-30)
     # D_i = sum_d do_i * o_i  (B,KV,G,Sq)
-    dsum = jnp.einsum("bkgqd,bkgqd->bkgq", do.astype(jnp.float32), o)
+    dsum = jnp.einsum("bkgqd,bkgqd->bkgq", do.astype(acc_dt), o)
 
     def body(dq_acc, inp):
         kc, vc, k_pos = inp
         s = jnp.einsum("bqkgd,bskd->bkgqs", qr, kc,
-                       preferred_element_type=jnp.float32) * scale
+                       preferred_element_type=acc_dt) * scale
         msk = _mask(q_pos, k_pos, causal=causal, window=window,
                     kv_valid=None)
         s = jnp.where(msk[None, None, None], s, NEG_INF)
         p = jnp.exp(s - m[..., None]) / l_safe[..., None]      # normalized
-        dp = jnp.einsum("bkgqd,bskd->bkgqs", do.astype(jnp.float32),
-                        vc.astype(jnp.float32))
+        dp = jnp.einsum("bkgqd,bskd->bkgqs", do.astype(acc_dt),
+                        vc.astype(acc_dt))
         ds = p * (dp - dsum[..., None]) * scale
         dv_c = jnp.einsum("bkgqs,bkgqd->bskd", p,
-                          do.astype(jnp.float32)).astype(vs.dtype)
+                          do.astype(acc_dt)).astype(vs.dtype)
         dk_c = jnp.einsum("bkgqs,bqkgd->bskd", ds.astype(qr.dtype),
                           qr).astype(ks.dtype)
         dq_acc = dq_acc + jnp.einsum("bkgqs,bskd->bqkgd",
@@ -297,7 +305,7 @@ def gqa_attention(q, k, v, *, causal=True, window=0, q_offset=0,
     if Sk <= chunk:
         k_pos = k_positions if k_positions is not None else kv_offset + jnp.arange(Sk)
         s = jnp.einsum("bqkgd,bskd->bkgqs", qr, k,
-                       preferred_element_type=jnp.float32) * scale
+                       preferred_element_type=_acc_dtype(q)) * scale
         m = _mask(q_pos, k_pos, causal=causal, window=window, kv_valid=kv_valid)
         s = jnp.where(m[None, None, None], s, NEG_INF)
         p = jax.nn.softmax(s, axis=-1).astype(v.dtype)

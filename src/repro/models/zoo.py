@@ -154,8 +154,14 @@ def loss_fn(cfg: ArchConfig, logits, tokens, aux=None):
     return loss
 
 
-def classification_loss(logits, labels):
-    logits = logits.astype(jnp.float32)
+def per_example_ce(logits, labels):
+    """Per-example cross-entropy (..., C) -> (...); accumulates in at
+    least f32 (f64 stays f64 for x64 parity runs)."""
+    logits = logits.astype(jnp.promote_types(logits.dtype, jnp.float32))
     lse = jax.nn.logsumexp(logits, axis=-1)
     gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
-    return jnp.mean(lse - gold)
+    return lse - gold
+
+
+def classification_loss(logits, labels):
+    return jnp.mean(per_example_ce(logits, labels))

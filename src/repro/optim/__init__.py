@@ -1,6 +1,6 @@
 """Optimizers (no optax): AdamW, SGD+momentum, FedProx proximal wrapper,
 FedAMS server optimizer, LR schedules."""
 from repro.optim.optimizers import (AdamW, SGD, FedProx, FedAMS,
-                                    Optimizer)  # noqa: F401
+                                    Optimizer, fedprox_gradient)  # noqa: F401
 from repro.optim.schedules import (constant, cosine_decay,
                                    warmup_cosine)  # noqa: F401

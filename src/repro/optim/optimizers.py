@@ -23,6 +23,18 @@ def _tmap(f, *trees):
     return jax.tree_util.tree_map(f, *trees)
 
 
+def fedprox_gradient(grads, params, anchor, mu: float):
+    """FedProx proximal gradient ``g + mu (w - w_anchor)``, leafwise.
+
+    Vectorizes over client-stacked parameter trees: ``params``/``grads``
+    may carry a leading client axis (N, ...) while ``anchor`` stays the
+    shared global tree — the anchor broadcasts against every client row,
+    so the batched federation engine and the sequential reference apply
+    the identical proximal term.
+    """
+    return _tmap(lambda g, p, a: g + mu * (p - a), grads, params, anchor)
+
+
 @dataclasses.dataclass
 class SGD(Optimizer):
     lr: float = 1e-2

@@ -6,8 +6,10 @@ from repro.configs import ASSIGNED, get_config
 from repro.launch.mesh import data_axes
 from repro.launch.train import batch_pspec, elsa_boundaries, elsa_channel_specs
 
-MESH = AbstractMesh((16, 16), ("data", "model"))
-MESH3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+from conftest import make_abstract_mesh
+
+MESH = make_abstract_mesh((16, 16), ("data", "model"))
+MESH3 = make_abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def test_batch_pspec_divisible():
