@@ -36,7 +36,7 @@ def _time_round(backend: str, steps: int, clients: int) -> float:
     return time.perf_counter() - t0
 
 
-def run(steps: int = 4, clients: int = 20):
+def run(steps: int = 4, clients: int = 20, write: bool = True):
     t_batched = _time_round("batched", steps, clients)
     t_reference = _time_round("reference", steps, clients)
     speedup = t_reference / t_batched
@@ -48,11 +48,20 @@ def run(steps: int = 4, clients: int = 20):
         "batched_s": round(t_batched, 3),
         "speedup": round(speedup, 2),
     }
-    write_json(os.path.abspath(OUT_PATH), payload)
+    if write:
+        write_json(os.path.abspath(OUT_PATH), payload)
     emit("fed_round_reference", t_reference * 1e6, f"{clients}x{steps}steps")
     emit("fed_round_batched", t_batched * 1e6, f"speedup={speedup:.2f}x")
     return payload
 
 
 if __name__ == "__main__":
-    print(run())
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny CI smoke configuration (no BENCH json)")
+    args = ap.parse_args()
+    if args.quick:
+        print(run(steps=2, clients=6, write=False))
+    else:
+        print(run())

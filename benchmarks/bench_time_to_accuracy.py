@@ -1,0 +1,154 @@
+"""Time-to-target under churn + constrained devices: sync vs deadline
+vs async edge scheduling.
+
+The ISSUE-2 acceptance scenario: 20 clients / 4 edges on a reduced BERT
+(CPU), 30% of devices compute-constrained (``constrained_frac``) and half
+the population cycling offline/online on an exponential churn trace.  All
+three policies run the *same* federation (same data, same splits, same
+compiled BatchedEngine); only the simulated schedule differs.  The
+barrier in ``sync`` pays the slowest straggler (churn pauses included)
+every edge round, so ``deadline`` (bounded rounds, straggler carry-over)
+and ``async`` (continuous staleness-weighted folding) reach the same
+training progress in less simulated wall-clock.
+
+Target metrics (both are first-crossing times on the simulated clock):
+
+- **primary: training-loss target** — fixed at 1.01x the *worst*
+  policy's best achieved mean training loss, so every policy provably
+  crosses it and the crossing reflects actual optimization progress.
+- **secondary: accuracy target** — chance + 0.08, reported only when a
+  policy's test-accuracy curve actually clears it.  On this repo's
+  offline synthetic corpus the reduced-BERT + SGD stack plateaus at
+  chance-level *test* accuracy for every method and scheduler (the same
+  caveat as ``bench_accuracy``: absolute accuracies are not comparable
+  to the paper; see ROADMAP), so this is typically ``null`` — it is
+  emitted instead of silently lowering the bar to eval cadence.
+
+Writes ``BENCH_time_to_accuracy.json`` at the repo root; ``--quick``
+shrinks everything for the CI smoke step and skips the JSON (it must
+not clobber the committed full-run artifact).
+"""
+import argparse
+import os
+
+import numpy as np
+
+from benchmarks.common import emit, write_json
+from repro.federation.simulation import FedConfig, Federation
+from repro.federation.topology import make_churn_trace
+from repro.runtime import RuntimeConfig
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_time_to_accuracy.json")
+POLICIES = ("sync", "deadline", "async")
+
+
+def _scenario(quick: bool):
+    if quick:
+        fed = dict(n_clients=6, n_edges=2, alpha=0.2, poisoned=(4,),
+                   total_examples=600, probe_q=8, local_warmup_steps=2,
+                   bert_layers=4, lr=2e-2, t_rounds=1, batch_size=16,
+                   constrained_frac=0.34, seed=0)
+        run = dict(global_rounds=3, steps_per_round=2)
+        churn = dict(mean_on_s=40.0, mean_off_s=15.0, churn_frac=0.5,
+                     seed=7)
+    else:
+        fed = dict(n_clients=20, n_edges=4, alpha=0.1,
+                   poisoned=(3, 8, 12, 17), total_examples=2000,
+                   probe_q=16, local_warmup_steps=2, bert_layers=4,
+                   lr=2e-2, t_rounds=1, batch_size=16,
+                   constrained_frac=0.3, seed=0)
+        run = dict(global_rounds=8, steps_per_round=4)
+        churn = dict(mean_on_s=30.0, mean_off_s=12.0, churn_frac=0.5,
+                     seed=7)
+    return fed, run, churn
+
+
+def _first_crossing(times, values, target, *, below: bool):
+    for t, v in zip(times, values):
+        if (v <= target) if below else (v >= target):
+            return float(t)
+    return None
+
+
+def run(quick: bool = False, method: str = "elsa-nocluster"):
+    fed_kw, run_kw, churn_kw = _scenario(quick)
+    churn = make_churn_trace(fed_kw["n_clients"], 1e6, **churn_kw)
+
+    results = {}
+    for policy in POLICIES:
+        fed = Federation(FedConfig(**fed_kw))
+        h = fed.run(method, eval_every=1,
+                    runtime=RuntimeConfig(policy=policy, churn=churn),
+                    **run_kw)
+        results[policy] = h
+        emit(f"tta_{policy}_sim_s", h["time"][-1] * 1e6,
+             f"final_acc={h['final_accuracy']:.4f} "
+             f"final_loss={h['loss'][-1]:.4f} "
+             f"rounds={len(h['round'])} trace={h['trace'].summary()}")
+
+    # primary: the worst policy's best achieved training loss, +1% slack,
+    # is reachable by every policy — crossing time measures optimization
+    # progress on the simulated clock, not eval cadence
+    loss_target = 1.01 * max(min(h["loss"]) for h in results.values())
+    # secondary: accuracy must clear chance by a margin to count at all
+    chance = 1.0 / FedConfig(**fed_kw).num_classes
+    acc_target = chance + 0.08
+
+    payload = {
+        "config": {**fed_kw, **run_kw, "method": method,
+                   "churn": churn_kw, "device": "cpu",
+                   "quick": bool(quick)},
+        "loss_target": round(loss_target, 6),
+        "accuracy_target": round(acc_target, 6),
+        "chance_accuracy": round(chance, 6),
+        "note": ("loss crossing is the primary metric: the offline "
+                 "synthetic corpus + reduced-BERT SGD stack plateaus at "
+                 "chance-level test accuracy for every method/scheduler "
+                 "(see ROADMAP open item), so accuracy crossings are "
+                 "null rather than cadence artifacts"),
+        "policies": {},
+    }
+    t_sync = None
+    for policy, h in results.items():
+        tl = _first_crossing(h["time"], h["loss"], loss_target, below=True)
+        ta = _first_crossing(h["time"], h["accuracy"], acc_target,
+                             below=False)
+        if policy == "sync":
+            t_sync = tl
+        payload["policies"][policy] = {
+            "time_to_loss_target_s": None if tl is None else round(tl, 3),
+            "time_to_accuracy_target_s": (None if ta is None
+                                          else round(ta, 3)),
+            "sim_time_s": round(h["time"][-1], 3),
+            "final_accuracy": round(h["final_accuracy"], 6),
+            "final_loss": round(h["loss"][-1], 6),
+            "loss": [round(l, 6) for l in h["loss"]],
+            "accuracy": [round(a, 6) for a in h["accuracy"]],
+            "time": [round(t, 3) for t in h["time"]],
+            "trace": h["trace"].summary(),
+        }
+    for policy in ("deadline", "async"):
+        tl = payload["policies"][policy]["time_to_loss_target_s"]
+        speedup = (round(t_sync / tl, 3)
+                   if tl not in (None, 0.0) and t_sync else None)
+        payload["policies"][policy]["speedup_vs_sync"] = speedup
+        emit(f"tta_{policy}_speedup", 0.0,
+             f"time_to_loss_{loss_target:.3f}: sync={t_sync} "
+             f"{policy}={tl} speedup={speedup}")
+    if not quick:   # CI smoke must not clobber the committed artifact
+        write_json(os.path.abspath(OUT_PATH), payload)
+    return payload
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny CI smoke configuration (no BENCH json)")
+    ap.add_argument("--method", default="elsa-nocluster")
+    args = ap.parse_args()
+    out = run(quick=args.quick, method=args.method)
+    for p, row in out["policies"].items():
+        print(p, "loss_t:", row["time_to_loss_target_s"],
+              "acc_t:", row["time_to_accuracy_target_s"],
+              "speedup:", row.get("speedup_vs_sync"))

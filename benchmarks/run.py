@@ -14,6 +14,7 @@ BENCHES = [
     ("kernels", "benchmarks.bench_kernels"),
     ("roofline", "benchmarks.bench_roofline"),
     ("fed_round", "benchmarks.bench_fed_round"),
+    ("time_to_accuracy", "benchmarks.bench_time_to_accuracy"),
 ]
 
 

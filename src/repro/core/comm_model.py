@@ -1,8 +1,17 @@
-"""Communication volume / latency model (ELSA §III.B.4, Eqs. 22–24)."""
+"""Communication volume / latency model (ELSA §III.B.4, Eqs. 22–24).
+
+:func:`comm_config_from` derives a :class:`CommConfig` from the *actual*
+artifacts of a federation — the model config, the count-sketch plan, and
+the LoRA parameter tree — instead of hand-typed constants, so the byte
+counts used by benchmarks and the event-driven runtime track whatever
+shapes the run really transmits.
+"""
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)
@@ -13,6 +22,56 @@ class CommConfig:
     d_hidden: int            # D^hidden
     rho: float               # sketch compression ratio
     lora_bytes: int          # |theta^LoRA| per edge->cloud upload
+
+
+def lora_tree_bytes(lora, bytes_per_param: Optional[float] = None) -> int:
+    """Serialized size of a LoRA pytree: array leaves use their own dtype;
+    :class:`~repro.models.params.Spec` leaves use ``bytes_per_param``."""
+    import jax.tree_util as jtu
+
+    from repro.models.params import is_spec
+
+    total = 0
+    for leaf in jtu.tree_leaves(lora, is_leaf=is_spec):
+        if is_spec(leaf):
+            total += int(np.prod(leaf.shape) * (bytes_per_param or 4.0))
+        else:
+            total += int(leaf.size) * np.dtype(leaf.dtype).itemsize
+    return total
+
+
+def comm_config_from(cfg, fed, plan=None, *, lora=None,
+                     seq_len: Optional[int] = None,
+                     num_classes: Optional[int] = None) -> CommConfig:
+    """Derive the Eq. 22–24 constants from real run artifacts.
+
+    - ``d_hidden`` = the model's hidden width (what actually crosses the
+      split boundary before sketching);
+    - ``rho`` = the *effective* compression ratio of ``plan``
+      (``D / (Y·Z)``), 1.0 when no sketch plan is used;
+    - ``bytes_per_param`` from the config's activation dtype (activations
+      are what Eq. 22's zeta multiplies);
+    - ``lora_bytes`` from the actual LoRA tree when given, else from the
+      model's LoRA parameter specs at the param dtype;
+    - ``seq_len``/``t_rounds`` from the federation config (``fed.seq_len``
+      may be overridden per task via ``seq_len=``).
+
+    ``fed`` is any object with ``t_rounds``/``seq_len``/``num_classes``
+    attributes (a :class:`~repro.federation.simulation.FedConfig`).
+    """
+    from repro.models.bert import bert_specs
+
+    zeta = float(np.dtype(cfg.activation_dtype).itemsize)
+    rho = float(plan.rho) if plan is not None else 1.0
+    if lora is None:
+        lora = bert_specs(cfg, num_classes or getattr(fed, "num_classes", 2)
+                          )["lora"]
+    lb = lora_tree_bytes(lora, np.dtype(cfg.param_dtype).itemsize)
+    return CommConfig(
+        t_rounds=int(fed.t_rounds), bytes_per_param=zeta,
+        seq_len=int(seq_len if seq_len is not None
+                    else getattr(fed, "seq_len", cfg.max_position_embeddings)),
+        d_hidden=int(cfg.d_model), rho=rho, lora_bytes=lb)
 
 
 def round_volume_bytes(cc: CommConfig, batch_sizes_per_edge: Dict[int, List[float]],

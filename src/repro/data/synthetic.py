@@ -24,6 +24,12 @@ class SyntheticTaskConfig:
     seq_len: int = 32
     class_sharpness: float = 4.0   # how peaked each class's distribution is
     background_frac: float = 0.5   # fraction of positions drawn iid uniform
+    cls_token: int = -1            # >= 0: pin this token at position 0 (a
+                                   # [CLS] convention — the classification
+                                   # head reads position 0, so a constant
+                                   # token there makes the readout position
+                                   # carry attention-mixed sequence signal
+                                   # instead of a random token's embedding)
     seed: int = 0
 
 
@@ -59,6 +65,8 @@ def sample_examples(cfg: SyntheticTaskConfig, class_p: np.ndarray,
         seq = np.concatenate([sig, bg])
         rng.shuffle(seq)
         out[i] = seq
+    if cfg.cls_token >= 0:
+        out[:, 0] = cfg.cls_token
     return out
 
 

@@ -71,6 +71,12 @@ class FedConfig:
     use_channel: bool = True
     use_ssop: bool = True
     bert_layers: int = 8                 # reduced-BERT depth (tests: 4)
+    seq_len: int = 24                    # synthetic-task sequence length
+    class_sharpness: float = 4.0         # synthetic-task separability
+    background_frac: float = 0.5         # synthetic-task noise fraction
+    cls_token: int = -1                  # >= 0: constant [CLS] at pos 0
+    constrained_frac: float = 0.0        # fraction of slow/throttled devices
+                                         # (paper §IV.A heterogeneity setup)
     dtype: str = "float32"               # params+activations; parity tests
                                          # use float64 (needs jax x64 mode)
 
@@ -96,8 +102,14 @@ class Federation:
             activation_dtype=fed.dtype)
         self.task = SyntheticTaskConfig(vocab_size=self.cfg.vocab_size,
                                         num_classes=fed.num_classes,
-                                        seq_len=24, seed=fed.seed)
-        self.topo = make_topology(fed.n_clients, fed.n_edges, seed=fed.seed)
+                                        seq_len=fed.seq_len,
+                                        class_sharpness=fed.class_sharpness,
+                                        background_frac=fed.background_frac,
+                                        cls_token=fed.cls_token,
+                                        seed=fed.seed)
+        self.topo = make_topology(fed.n_clients, fed.n_edges,
+                                  constrained_frac=fed.constrained_frac,
+                                  seed=fed.seed)
         self.data = make_federation_data(
             self.task, fed.n_clients, fed.total_examples, fed.alpha,
             poisoned_clients=fed.poisoned, seed=fed.seed)
@@ -139,6 +151,16 @@ class Federation:
     def _default_split(self) -> Split:
         return Split(self.policy.p_max,
                      self.cfg.num_layers - self.policy.p_max - 2, 2)
+
+    def split_for(self, client: int, use_split: bool = True) -> Split:
+        """The tripartite split client ``client`` trains (and is billed
+        for, in the event-driven runtime's cost model)."""
+        return (Split(*self.splits[client]) if use_split
+                else self._default_split())
+
+    def client_weight(self, client: int) -> int:
+        """FedAvg weight: the client's example count."""
+        return len(self.data[client].tokens)
 
     # ------------------------------------------------------------------
     def channel_for(self, client: int, lora, emb=None) -> Channel:
@@ -291,15 +313,11 @@ class Federation:
         return div, trust, result, warm_loras
 
     # ------------------------------------------------------------------
-    def run(self, method: str = "elsa", global_rounds: int = 10,
-            steps_per_round: int = 4, eval_every: int = 1,
-            log: bool = False) -> Dict:
+    def _assign_groups(self, method: str, rng):
+        """Phase-1 edge assignment shared by the round loop and the
+        event-driven runtime: returns ``(groups, div, trust)``."""
         fed = self.fed
-        rng = np.random.default_rng(fed.seed + 5)
-        history = {"round": [], "accuracy": [], "loss": [], "delta": []}
-
         use_cluster = method in ("elsa", "elsa-fixed")
-        use_split_dyn = method not in ("elsa-fixed",)
         if method in ("elsa", "elsa-fixed", "elsa-nocluster"):
             div, trust, cres, _ = (self.profile_clients() if use_cluster
                                    else (None, None, None, None))
@@ -324,6 +342,46 @@ class Federation:
             groups = {0: list(range(fed.n_clients))}
             div = np.zeros((fed.n_clients, fed.n_clients))
             trust = np.ones(fed.n_clients)
+        return groups, div, trust
+
+    def _edge_round(self, active, theta_k, steps: int, iters, *,
+                    use_split: bool = True, prox_anchor=None):
+        """One local round for ``active`` clients from edge model
+        ``theta_k``; returns ``(locals_, weights, {client: loss})``."""
+        res = self.group_steps(active, theta_k, steps, iters,
+                               use_split=use_split,
+                               prox_anchor=prox_anchor)
+        locals_ = [res[n][0] for n in active]
+        weights = [self.client_weight(n) for n in active]
+        losses = {n: res[n][1] for n in active}
+        return locals_, weights, losses
+
+    # ------------------------------------------------------------------
+    def run(self, method: str = "elsa", global_rounds: int = 10,
+            steps_per_round: int = 4, eval_every: int = 1,
+            log: bool = False, runtime=None) -> Dict:
+        """Run the federation.
+
+        ``runtime=None`` keeps the historical round-synchronous loop
+        (no wall-clock model).  Passing a
+        :class:`repro.runtime.RuntimeConfig` delegates to the
+        event-driven :class:`repro.runtime.EdgeRuntime` — histories gain
+        a simulated ``time`` axis and an event ``trace``; with
+        ``policy="sync"`` and no churn the training math (and therefore
+        the history) is identical to the historical loop.
+        """
+        if runtime is not None:
+            from repro.runtime import EdgeRuntime
+            return EdgeRuntime(self, runtime).run(
+                method, global_rounds=global_rounds,
+                steps_per_round=steps_per_round, eval_every=eval_every,
+                log=log)
+        fed = self.fed
+        rng = np.random.default_rng(fed.seed + 5)
+        history = {"round": [], "accuracy": [], "loss": [], "delta": []}
+
+        use_split_dyn = method not in ("elsa-fixed",)
+        groups, div, trust = self._assign_groups(method, rng)
 
         theta = self.lora0
         iters = {n: infinite_batches(self.data[n].tokens,
@@ -346,17 +404,13 @@ class Federation:
                     active = list(rng.choice(members, m, replace=False))
                 theta_k = theta
                 for _ in range(fed.t_rounds):
-                    res = self.group_steps(
+                    locals_, weights, loss_map = self._edge_round(
                         active, theta_k, steps_per_round, iters,
                         use_split=use_split_dyn,
                         prox_anchor=theta if method == "fedprox" else None)
-                    locals_, weights = [], []
                     for n in active:
-                        lora_n, ls = res[n]
-                        locals_.append(lora_n)
-                        weights.append(len(self.data[n].tokens))
-                        losses.append(ls)
-                        client_losses[n].append(ls)
+                        losses.append(loss_map[n])
+                        client_losses[n].append(loss_map[n])
                     theta_k = agg.fedavg(locals_, weights)
                 edge_thetas[k] = theta_k
                 edge_alphas[k] = agg.edge_weight(

@@ -1,9 +1,12 @@
 """Edge-network geometry and resource profiles (ELSA §IV.A: 20 clients,
-4 edge servers in an 8km x 8km area; B_n in [50, 100] Mbps)."""
+4 edge servers in an 8km x 8km area; B_n in [50, 100] Mbps), plus the
+client availability (churn) traces consumed by the event-driven runtime
+(:mod:`repro.runtime`): per-client alternating on/off renewal processes
+with exponential dwell times."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import List, Tuple
 
 import numpy as np
 
@@ -42,3 +45,86 @@ def make_topology(n_clients: int, n_edges: int, *, area_km: float = 8.0,
         cap[idx] = rng.uniform(flops_range[0], flops_range[0] * 4, k)
         bw[idx] = bw[idx] * 0.3
     return Topology(cxy, exy, lat, bw, cap)
+
+
+# ---------------------------------------------------------------------------
+# client availability / churn
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ChurnTrace:
+    """Per-client offline intervals over a finite horizon.
+
+    ``offline[n]`` is an (M_n, 2) array of non-overlapping, sorted
+    ``[start, end)`` intervals during which client n is unreachable.
+    Work that overlaps an offline interval pauses and resumes on rejoin
+    (device churn, not data loss).  Beyond ``horizon_s`` every client is
+    treated as always-on, so simulations that outrun the trace stay
+    well-defined.
+    """
+    offline: List[np.ndarray]
+    horizon_s: float
+
+    def is_online(self, n: int, t: float) -> bool:
+        for s, e in self.offline[n]:
+            if s <= t < e:
+                return False
+            if s > t:
+                break
+        return True
+
+    def next_online(self, n: int, t: float) -> float:
+        """Earliest time >= t at which client n is online."""
+        for s, e in self.offline[n]:
+            if s <= t < e:
+                return float(e)
+            if s > t:
+                break
+        return t
+
+    def finish_time(self, n: int, start: float, work_s: float) -> float:
+        """When ``work_s`` seconds of on-device work started at ``start``
+        completes, pausing across every offline interval it straddles."""
+        t = self.next_online(n, start)
+        remaining = work_s
+        for s, e in self.offline[n]:
+            if e <= t:
+                continue
+            gap = s - t               # online time before this outage
+            if gap >= remaining:
+                return t + remaining
+            remaining -= max(gap, 0.0)
+            t = float(e)              # pause: resume at rejoin
+        return t + remaining
+
+
+def always_on(n_clients: int) -> ChurnTrace:
+    """Degenerate trace: every client permanently available."""
+    return ChurnTrace([np.zeros((0, 2))] * n_clients, 0.0)
+
+
+def make_churn_trace(n_clients: int, horizon_s: float, *,
+                     mean_on_s: float = 60.0, mean_off_s: float = 20.0,
+                     churn_frac: float = 1.0, seed: int = 0) -> ChurnTrace:
+    """Alternating-renewal availability traces (exponential dwell times).
+
+    A ``churn_frac`` fraction of clients cycles online/offline with mean
+    dwell times ``mean_on_s`` / ``mean_off_s``; the rest are always on.
+    Every client starts online (the first outage begins after one on-dwell),
+    matching the common FL assumption that the round-0 cohort is reachable.
+    """
+    rng = np.random.default_rng(seed)
+    churny = set(rng.choice(n_clients, int(round(churn_frac * n_clients)),
+                            replace=False).tolist())
+    offline: List[np.ndarray] = []
+    for n in range(n_clients):
+        if n not in churny:
+            offline.append(np.zeros((0, 2)))
+            continue
+        ivals, t = [], float(rng.exponential(mean_on_s))
+        while t < horizon_s:
+            off = float(rng.exponential(mean_off_s))
+            ivals.append((t, t + off))
+            t += off + float(rng.exponential(mean_on_s))
+        offline.append(np.asarray(ivals, float).reshape(-1, 2))
+    return ChurnTrace(offline, float(horizon_s))

@@ -1,0 +1,29 @@
+"""Event-driven edge runtime: wall-clock simulation of hierarchical FL.
+
+The round-synchronous :meth:`repro.federation.simulation.Federation.run`
+loop has no notion of time — every client finishes every round instantly.
+This subsystem assigns each client a simulated wall-clock cost per local
+round (compute from ``Topology.capacity`` + the client's ``Split`` FLOPs,
+uplink/downlink from the Eq. 22–24 comm model fed by the *actual*
+``SketchPlan``/LoRA shapes), models availability churn, and schedules edge
+rounds under pluggable policies:
+
+- ``sync``      — barrier per edge round; reproduces today's semantics
+                  (bit-identical history on the batched backend);
+- ``deadline``  — the edge aggregates whoever reported by a per-round
+                  deadline; stragglers carry their update into the next
+                  aggregation;
+- ``async``     — the edge folds arrivals in continuously with
+                  staleness-discounted weights; the cloud fuses on a period.
+
+Entry points: ``Federation.run(..., runtime=RuntimeConfig(...))`` or
+:class:`EdgeRuntime` directly.  Histories gain a ``time`` axis (simulated
+seconds) so accuracy-vs-wall-clock curves exist.
+"""
+from repro.runtime.cost import ClientCostModel, RoundCost
+from repro.runtime.events import Event, EventQueue
+from repro.runtime.runtime import EdgeRuntime, RuntimeConfig
+from repro.runtime.trace import EventTrace
+
+__all__ = ["ClientCostModel", "RoundCost", "EdgeRuntime", "Event",
+           "EventQueue", "EventTrace", "RuntimeConfig"]

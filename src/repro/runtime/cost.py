@@ -1,0 +1,127 @@
+"""Wall-clock cost model for one client-edge local round.
+
+Compute time follows the roofline module's 6·N·D training convention
+(:mod:`repro.analysis.roofline`): a local step costs ``6 × N_client ×
+tokens`` FLOPs, where ``N_client`` counts only the parameters the client
+actually executes under its tripartite :class:`~repro.core.split_training.
+Split` — Part 1 (``p`` blocks) + Part 3 (``o`` blocks + pooler/head); the
+edge runs the ``q`` middle blocks on server-class capacity.  Divided by
+``Topology.capacity[n]`` (FLOP/s) this yields compute seconds.
+
+Communication time prices the sketched boundary activations with the
+Eq. 22–24 model (:mod:`repro.core.comm_model`) fed by a ``CommConfig``
+derived from the *actual* model config and ``SketchPlan``
+(``comm_config_from``), plus the per-edge-round LoRA upload and the
+propagation latency of the client-edge link.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core.comm_model import CommConfig, client_comm_time
+from repro.core.split_training import Split
+from repro.models.bert import bert_specs
+from repro.models.params import is_spec
+
+EDGE_FLOPS_DEFAULT = 5e12    # server-class edge accelerator (FLOP/s)
+
+
+def _spec_params(tree) -> float:
+    import jax.tree_util as jtu
+    return float(sum(np.prod(s.shape)
+                     for s in jtu.tree_leaves(tree, is_leaf=is_spec)))
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundCost:
+    """Cost breakdown of one local round (seconds)."""
+    compute_s: float
+    comm_s: float
+    latency_s: float
+
+    @property
+    def total_s(self) -> float:
+        return self.compute_s + self.comm_s + self.latency_s
+
+
+class ClientCostModel:
+    """Maps (client, Split, steps) -> simulated seconds.
+
+    Deterministic: costs depend only on the topology, the model shapes,
+    and optional per-(client, round) lognormal jitter drawn from a seeded
+    generator — identical across runs with the same config.
+    """
+
+    def __init__(self, cfg, topo, comm: CommConfig, *, batch_size: int,
+                 num_classes: int = 2,
+                 edge_flops: float = EDGE_FLOPS_DEFAULT,
+                 jitter_sigma: float = 0.0, seed: int = 0):
+        self.cfg = cfg
+        self.topo = topo
+        self.comm = comm
+        self.batch_size = int(batch_size)
+        self.edge_flops = float(edge_flops)
+        self.jitter_sigma = float(jitter_sigma)
+        self._seed = seed
+
+        specs = bert_specs(cfg, num_classes)
+        n_layers = cfg.num_layers
+        self.block_params = (_spec_params(specs["frozen"]["blocks"])
+                             + _spec_params(specs["lora"]["blocks"])
+                             ) / n_layers
+        self.head_params = (_spec_params(specs["lora"]["pooler"])
+                            + _spec_params(specs["lora"]["head"]))
+
+    # -- FLOPs (6ND convention) -------------------------------------------
+    def client_flops_per_step(self, split: Split) -> float:
+        n = (split.p + split.o) * self.block_params + self.head_params
+        tokens = self.batch_size * self.comm.seq_len
+        return 6.0 * n * tokens
+
+    def edge_flops_per_step(self, split: Split) -> float:
+        return 6.0 * split.q * self.block_params \
+            * self.batch_size * self.comm.seq_len
+
+    # -- per-round cost ----------------------------------------------------
+    def round_cost(self, client: int, split: Split, steps: int,
+                   edge: Optional[int] = None,
+                   round_idx: int = 0) -> RoundCost:
+        """One local round of ``steps`` gradient steps for ``client``.
+
+        ``edge=None`` (or an out-of-range escalation key like ``-1``)
+        prices the nearest edge's link latency.
+        """
+        cap = float(self.topo.capacity[client])
+        compute = steps * (self.client_flops_per_step(split) / cap
+                           + self.edge_flops_per_step(split)
+                           / self.edge_flops)
+        if self.jitter_sigma > 0.0:
+            rng = np.random.default_rng(
+                (self._seed, client, round_idx))
+            compute *= float(rng.lognormal(0.0, self.jitter_sigma))
+
+        # boundary activations for the whole round (Eq. 23 with t=1 and
+        # the real examples-per-round count) + the LoRA upload to the edge
+        per_round = dataclasses.replace(self.comm, t_rounds=1)
+        bw = float(self.topo.bandwidth[client])
+        comm = client_comm_time(per_round, self.batch_size * steps, bw)
+        comm += self.comm.lora_bytes / max(bw, 1e-9)
+
+        k = edge if edge is not None and 0 <= edge < \
+            self.topo.latency.shape[1] else int(
+                np.argmin(self.topo.latency[client]))
+        lat = 2.0 * float(self.topo.latency[client, k]) / 1e3
+        return RoundCost(compute, comm, lat)
+
+    def estimate_population(self, splits: Dict[int, Split], steps: int,
+                            edge_of: Optional[Dict[int, int]] = None
+                            ) -> Dict[int, float]:
+        """Total seconds per client for one local round (no churn) —
+        used by schedulers to auto-derive deadlines / cloud periods."""
+        return {n: self.round_cost(
+                    n, s, steps,
+                    edge_of.get(n) if edge_of else None).total_s
+                for n, s in splits.items()}

@@ -1,0 +1,499 @@
+"""Scheduler policies for the event-driven edge runtime.
+
+All three schedulers drive the same training machinery — the
+federation's compiled :class:`~repro.federation.engine.BatchedEngine`
+via ``Federation._edge_round`` (which buckets whatever ready-set it is
+handed by split configuration) — and differ only in *when* edge and
+cloud aggregations happen on the simulated clock:
+
+- :class:`SyncScheduler`: barrier per edge round.  With no churn this
+  issues the exact same sequence of training/aggregation calls as the
+  historical ``Federation.run`` loop, so histories are bit-identical on
+  the batched backend; it additionally prices every round in simulated
+  seconds (the barrier waits for the slowest straggler, churn pauses
+  included).
+- :class:`DeadlineScheduler`: the edge aggregates whoever reported
+  within a per-round deadline; stragglers keep training and their
+  updates carry over into a later aggregation with a per-round-late
+  weight discount.
+- :class:`AsyncScheduler`: the edge folds each arrival into its model
+  continuously with staleness-discounted mixing weights (FedAsync-style)
+  and the cloud fuses edge models on a fixed period.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.core import aggregation as agg
+from repro.data.pipeline import infinite_batches
+from repro.optim import FedAMS
+from repro.runtime.client import ClientRuntimeState
+from repro.runtime.events import (ARRIVAL, CLOUD_AGG, DISPATCH, EDGE_AGG,
+                                  EVAL, OFFLINE, REJOIN, Event, EventQueue)
+
+ELSA_METHODS = ("elsa", "elsa-fixed", "elsa-nocluster")
+
+
+def _mix(theta, update, w: float):
+    """theta <- (1-w) theta + w update (async edge fold)."""
+    return jax.tree_util.tree_map(lambda a, b: (1.0 - w) * a + w * b,
+                                  theta, update)
+
+
+class _SchedulerBase:
+    def __init__(self, rt):
+        self.rt = rt
+        self.fed = rt.federation
+        self.fc = rt.federation.fed
+        self.cost = rt.cost
+        self.churn = rt.churn
+        self.trace = rt.trace
+        self.rcfg = rt.config
+
+    # -- shared setup ------------------------------------------------------
+    def _setup(self, method: str):
+        fc = self.fc
+        rng = np.random.default_rng(fc.seed + 5)
+        groups, div, trust = self.fed._assign_groups(method, rng)
+        iters = {n: infinite_batches(self.fed.data[n].tokens,
+                                     self.fed.data[n].labels, fc.batch_size,
+                                     seed=fc.seed + 100 + n)
+                 for n in range(fc.n_clients)}
+        server_opt = FedAMS(lr=1.0) if method == "fedams" else None
+        server_state = server_opt.init(self.fed.lora0) if server_opt \
+            else None
+        return rng, groups, div, trust, iters, server_opt, server_state
+
+    def _round_seconds(self, n: int, use_split: bool, steps: int,
+                       edge: int, round_idx: int) -> float:
+        return self.cost.round_cost(
+            n, self.fed.split_for(n, use_split), steps,
+            edge, round_idx).total_s
+
+    # -- cloud fusion (identical math to Federation.run) -------------------
+    def _cloud_fuse(self, method: str, edge_thetas, edge_alphas, theta,
+                    server_opt, server_state):
+        if method in ELSA_METHODS:
+            theta_new = agg.cloud_aggregate(edge_thetas, edge_alphas)
+        else:
+            ws = {k: 1.0 for k in edge_thetas}
+            theta_new = agg.cloud_aggregate(edge_thetas, ws)
+        if server_opt is not None:
+            pseudo = jax.tree_util.tree_map(lambda a, b: a - b, theta,
+                                            theta_new)
+            theta_new, server_state = server_opt.update(theta, pseudo,
+                                                        server_state)
+        delta = agg.global_delta(theta_new, theta)
+        return theta_new, server_state, delta
+
+    def _edge_alpha(self, div, trust, members) -> float:
+        return agg.edge_weight(agg.mean_pairwise_kld(div, members),
+                               float(np.mean(trust[members])))
+
+    def _record_eval(self, history, round_idx: int, t: float, theta,
+                     losses, delta: float, log: bool, label: str) -> None:
+        """Evaluate + append one history/trace point (all policies)."""
+        acc = self.fed.evaluate(theta)
+        self.trace.log(t, EVAL, round=round_idx, accuracy=acc)
+        history["round"].append(round_idx)
+        history["time"].append(t)
+        history["accuracy"].append(acc)
+        history["loss"].append(
+            float(np.mean(losses)) if losses else float("nan"))
+        history["delta"].append(delta)
+        if log:
+            print(f"[{label}] round {round_idx}: t={t:.1f}s "
+                  f"acc={acc:.4f} loss={history['loss'][-1]:.4f}")
+
+    def _finish_history(self, history, theta, client_losses):
+        if not history["accuracy"]:
+            # simulation hit max_sim_s before the first eval point
+            history["round"].append(0)
+            history["time"].append(0.0)
+            history["accuracy"].append(self.fed.evaluate(theta))
+            history["loss"].append(float("nan"))
+            history["delta"].append(float("nan"))
+        history["final_accuracy"] = history["accuracy"][-1]
+        history["client_losses"] = client_losses
+        self.fed.last_theta = theta
+        return history
+
+
+# ---------------------------------------------------------------------------
+# sync: barrier semantics, priced in wall-clock
+# ---------------------------------------------------------------------------
+
+class SyncScheduler(_SchedulerBase):
+    """Reproduces ``Federation.run`` exactly (same dispatch sequence,
+    same aggregation order) while assigning every round a simulated
+    duration: each edge round ends when its slowest participant finishes
+    (churn pauses included); the cloud waits for the slowest edge."""
+
+    def run(self, method: str, global_rounds: int, steps_per_round: int,
+            eval_every: int, log: bool) -> Dict:
+        fed, fc = self.fed, self.fc
+        use_split_dyn = method not in ("elsa-fixed",)
+        rng, groups, div, trust, iters, server_opt, server_state = \
+            self._setup(method)
+        history = {"round": [], "time": [], "accuracy": [], "loss": [],
+                   "delta": []}
+        client_losses: Dict[int, List[float]] = {
+            n: [] for n in range(fc.n_clients)}
+        theta = fed.lora0
+        t_global = 0.0
+
+        for g in range(global_rounds):
+            edge_thetas, edge_alphas, losses = {}, {}, []
+            edge_done = {}
+            for k, members in groups.items():
+                if not members:
+                    continue
+                active = members
+                if method == "fedavg-random":
+                    m = max(1, len(members) // 2)
+                    active = list(rng.choice(members, m, replace=False))
+                theta_k = theta
+                t_k = t_global
+                for r in range(fc.t_rounds):
+                    avail = [n for n in active
+                             if self.churn.is_online(n, t_k)]
+                    while not avail:
+                        # whole cohort offline: the barrier waits for the
+                        # first rejoin (finite churn traces guarantee one)
+                        t_k = min(self.churn.next_online(n, t_k)
+                                  for n in active
+                                  if not self.churn.is_online(n, t_k))
+                        avail = [n for n in active
+                                 if self.churn.is_online(n, t_k)]
+                    for n in avail:
+                        self.trace.log(t_k, DISPATCH, n, k, round=g,
+                                       edge_round=r)
+                    for n in active:
+                        if n not in avail:
+                            self.trace.log(t_k, OFFLINE, n, k,
+                                           round=g, edge_round=r)
+                    locals_, weights, loss_map = fed._edge_round(
+                        avail, theta_k, steps_per_round, iters,
+                        use_split=use_split_dyn,
+                        prox_anchor=theta if method == "fedprox" else None)
+                    barrier = t_k
+                    for n in avail:
+                        dur = self._round_seconds(n, use_split_dyn,
+                                                  steps_per_round, k, g)
+                        f_n = self.churn.finish_time(n, t_k, dur)
+                        self.trace.log(f_n, ARRIVAL, n, k, round=g)
+                        barrier = max(barrier, f_n)
+                    for n in avail:
+                        losses.append(loss_map[n])
+                        client_losses[n].append(loss_map[n])
+                    theta_k = agg.fedavg(locals_, weights)
+                    t_k = barrier
+                    self.trace.log(t_k, EDGE_AGG, -1, k, round=g,
+                                   n_updates=len(avail))
+                edge_thetas[k] = theta_k
+                edge_alphas[k] = self._edge_alpha(div, trust, active)
+                edge_done[k] = t_k
+
+            t_global = max(edge_done.values()) + self.rt.backhaul_s
+            theta, server_state, delta = self._cloud_fuse(
+                method, edge_thetas, edge_alphas, theta, server_opt,
+                server_state)
+            self.trace.log(t_global, CLOUD_AGG, round=g,
+                           n_edges=len(edge_thetas))
+            if g % eval_every == 0 or g == global_rounds - 1:
+                self._record_eval(history, g, t_global, theta, losses,
+                                  delta, log, f"sync/{method}")
+            if delta <= fc.xi or t_global >= self.rcfg.max_sim_s:
+                break
+        return self._finish_history(history, theta, client_losses)
+
+
+# ---------------------------------------------------------------------------
+# deadline: bounded edge rounds, straggler carry-over
+# ---------------------------------------------------------------------------
+
+class DeadlineScheduler(_SchedulerBase):
+    """Edge rounds end at ``start + deadline_s``; whoever reported in the
+    window is folded into the edge model by partial-participation
+    averaging — the current ``theta_k`` is weighted by the cohort mass
+    that did *not* report, so late windows perturb rather than replace
+    it — with stragglers from earlier rounds discounted by
+    ``straggler_discount**rounds_late``.  Clients still training at the
+    deadline are simply not re-dispatched until they finish — their work
+    is never thrown away, it just arrives late."""
+
+    def run(self, method: str, global_rounds: int, steps_per_round: int,
+            eval_every: int, log: bool) -> Dict:
+        fed, fc = self.fed, self.fc
+        use_split_dyn = method not in ("elsa-fixed",)
+        rng, groups, div, trust, iters, server_opt, server_state = \
+            self._setup(method)
+        history = {"round": [], "time": [], "accuracy": [], "loss": [],
+                   "delta": []}
+        client_losses: Dict[int, List[float]] = {
+            n: [] for n in range(fc.n_clients)}
+        theta = fed.lora0
+        t_global = 0.0
+
+        placed = [n for ms in groups.values() for n in ms]
+        deadline_s = self.rcfg.deadline_s
+        if deadline_s is None:
+            est = self.cost.estimate_population(
+                {n: fed.split_for(n, use_split_dyn) for n in placed},
+                steps_per_round)
+            deadline_s = float(np.quantile(list(est.values()),
+                                           self.rcfg.deadline_quantile))
+        states = {n: ClientRuntimeState(n) for n in placed}
+        queues = {k: EventQueue() for k, ms in groups.items() if ms}
+        edge_round_idx = {k: 0 for k in queues}
+
+        for g in range(global_rounds):
+            edge_thetas, edge_alphas, losses = {}, {}, []
+            edge_done = {}
+            for k, members in groups.items():
+                if not members:
+                    continue
+                active = members
+                if method == "fedavg-random":
+                    m = max(1, len(members) // 2)
+                    active = list(rng.choice(members, m, replace=False))
+                theta_k = theta
+                t_k = t_global
+                for _ in range(fc.t_rounds):
+                    t_k, theta_k = self._edge_deadline_round(
+                        k, active, theta_k, t_k, deadline_s,
+                        steps_per_round, iters, method, theta,
+                        use_split_dyn, states, queues[k], edge_round_idx,
+                        losses, client_losses, g)
+                edge_thetas[k] = theta_k
+                edge_alphas[k] = self._edge_alpha(div, trust, active)
+                edge_done[k] = t_k
+
+            t_global = max(edge_done.values()) + self.rt.backhaul_s
+            theta, server_state, delta = self._cloud_fuse(
+                method, edge_thetas, edge_alphas, theta, server_opt,
+                server_state)
+            self.trace.log(t_global, CLOUD_AGG, round=g,
+                           n_edges=len(edge_thetas))
+            if g % eval_every == 0 or g == global_rounds - 1:
+                self._record_eval(history, g, t_global, theta, losses,
+                                  delta, log, f"deadline/{method}")
+            if delta <= fc.xi or t_global >= self.rcfg.max_sim_s:
+                break
+        return self._finish_history(history, theta, client_losses)
+
+    # ------------------------------------------------------------------
+    def _edge_deadline_round(self, k, active, theta_k, t_k, deadline_s,
+                             steps, iters, method, theta_anchor,
+                             use_split_dyn, states, queue, edge_round_idx,
+                             losses, client_losses, g):
+        """One deadline-bounded edge round; returns (t_end, theta_k)."""
+        fed = self.fed
+        r_idx = edge_round_idx[k]
+        while True:
+            ready = [n for n in active if states[n].idle
+                     and self.churn.is_online(n, t_k)]
+            if ready:
+                locals_, _, loss_map = fed._edge_round(
+                    ready, theta_k, steps, iters, use_split=use_split_dyn,
+                    prox_anchor=(theta_anchor if method == "fedprox"
+                                 else None))
+                for lora_n, n in zip(locals_, ready):
+                    dur = self._round_seconds(n, use_split_dyn, steps, k,
+                                              states[n].rounds_run)
+                    f_n = self.churn.finish_time(n, t_k, dur)
+                    states[n].dispatch(t_k, f_n, 0, r_idx)
+                    queue.push(Event(f_n, ARRIVAL, n, k,
+                                     payload=(lora_n, loss_map[n])))
+                    self.trace.log(t_k, DISPATCH, n, k, round=g,
+                                   edge_round=r_idx)
+            if queue:
+                break
+            # nothing in flight and nobody dispatchable: jump to the
+            # first rejoin among idle members and retry
+            t_k = min(self.churn.next_online(n, t_k) for n in active
+                      if states[n].idle
+                      and not self.churn.is_online(n, t_k))
+
+        deadline = t_k + deadline_s
+        nxt = queue.peek()
+        if nxt.time > deadline:
+            # nobody would report in the window — stretch it to the first
+            # arrival so an edge round never aggregates nothing
+            deadline = nxt.time
+        upds, wts, n_late, rep_w = [], [], 0, 0.0
+        for ev in queue.drain_until(deadline):
+            n = ev.client
+            states[n].complete(ev.payload)
+            lora_n, loss_n = states[n].collect()
+            late = r_idx - states[n].base_round
+            w = fed.client_weight(n) \
+                * (self.rcfg.straggler_discount ** late)
+            upds.append(lora_n)
+            wts.append(w)
+            rep_w += fed.client_weight(n)
+            n_late += int(late > 0)
+            losses.append(loss_n)
+            client_losses[n].append(loss_n)
+            self.trace.log(ev.time, ARRIVAL, n, k, round=g, late=late)
+        # partial participation: the current edge model stands in for the
+        # cohort mass that did NOT report this window, so a lone (possibly
+        # stale, discounted) arrival perturbs theta_k proportionally
+        # instead of replacing it — fedavg's weight normalization would
+        # otherwise cancel the straggler discount whenever a window's
+        # arrivals are uniformly late
+        absent_w = max(float(sum(fed.client_weight(n) for n in active))
+                       - rep_w, 0.0)
+        if absent_w > 0:
+            theta_k = agg.fedavg([theta_k] + upds, [absent_w] + wts)
+        else:
+            theta_k = agg.fedavg(upds, wts)
+        self.trace.log(deadline, EDGE_AGG, -1, k, round=g,
+                       n_updates=len(upds), n_stragglers=n_late)
+        edge_round_idx[k] = r_idx + 1
+        return deadline, theta_k
+
+
+# ---------------------------------------------------------------------------
+# async: continuous staleness-weighted folding, periodic cloud fusion
+# ---------------------------------------------------------------------------
+
+class AsyncScheduler(_SchedulerBase):
+    """FedAsync-style hierarchical execution: every arrival is folded
+    into its edge model immediately with weight
+    ``alpha / (1 + staleness)^decay`` (staleness = edge-model versions
+    since dispatch) and the client is re-dispatched from the fresh edge
+    model; the cloud fuses all edge models every ``cloud_period_s``
+    simulated seconds and broadcasts the result back to the edges.
+    ``global_rounds`` counts cloud fusions."""
+
+    def run(self, method: str, global_rounds: int, steps_per_round: int,
+            eval_every: int, log: bool) -> Dict:
+        fed, fc = self.fed, self.fc
+        use_split_dyn = method not in ("elsa-fixed",)
+        rng, groups, div, trust, iters, server_opt, server_state = \
+            self._setup(method)
+        del rng   # async has no per-round subsampling
+        history = {"round": [], "time": [], "accuracy": [], "loss": [],
+                   "delta": []}
+        client_losses: Dict[int, List[float]] = {
+            n: [] for n in range(fc.n_clients)}
+
+        groups = {k: ms for k, ms in groups.items() if ms}
+        theta = fed.lora0
+        edge_theta = {k: theta for k in groups}
+        version = {k: 0 for k in groups}
+        states = {n: ClientRuntimeState(n)
+                  for ms in groups.values() for n in ms}
+        queue = EventQueue()
+        self._steps = steps_per_round
+        self._use_split_dyn = use_split_dyn
+        self._method = method
+        self._iters = iters
+        self._anchor = theta
+
+        period = self.rcfg.cloud_period_s
+        if period is None:
+            est = self.cost.estimate_population(
+                {n: fed.split_for(n, use_split_dyn) for n in states},
+                steps_per_round)
+            period = fc.t_rounds * float(np.median(list(est.values()))) \
+                + self.rt.backhaul_s
+
+        # initial dispatch: every online member, batched per edge
+        for k, members in groups.items():
+            ready = [n for n in members if self.churn.is_online(n, 0.0)]
+            if ready:
+                self._dispatch(ready, k, 0.0, edge_theta[k], version[k],
+                               states, queue)
+            for n in members:
+                if n not in ready:
+                    queue.push(Event(self.churn.next_online(n, 0.0),
+                                     REJOIN, n, k))
+        queue.push(Event(period, CLOUD_AGG))
+
+        fusions = 0
+        window_losses: List[float] = []
+        while queue and fusions < global_rounds:
+            ev = queue.pop()
+            t = ev.time
+            if t > self.rcfg.max_sim_s:
+                break
+            if ev.kind == ARRIVAL:
+                n, k = ev.client, ev.edge
+                states[n].complete(ev.payload)
+                lora_n, loss_n = states[n].collect()
+                s = states[n].staleness(version[k])
+                w = min(1.0, self.rcfg.async_alpha
+                        / (1.0 + s) ** self.rcfg.staleness_decay)
+                edge_theta[k] = _mix(edge_theta[k], lora_n, w)
+                version[k] += 1
+                window_losses.append(loss_n)
+                client_losses[n].append(loss_n)
+                self.trace.log(t, ARRIVAL, n, k, staleness=s,
+                               weight=round(w, 6))
+                if self.churn.is_online(n, t):
+                    self._dispatch([n], k, t, edge_theta[k], version[k],
+                                   states, queue)
+                else:
+                    queue.push(Event(self.churn.next_online(n, t),
+                                     REJOIN, n, k))
+            elif ev.kind == REJOIN:
+                n, k = ev.client, ev.edge
+                if states[n].idle and self.churn.is_online(n, t):
+                    self._dispatch([n], k, t, edge_theta[k], version[k],
+                                   states, queue)
+                elif states[n].idle:
+                    queue.push(Event(self.churn.next_online(n, t),
+                                     REJOIN, n, k))
+            elif ev.kind == CLOUD_AGG:
+                fusions += 1
+                alphas = {k: self._edge_alpha(div, trust, groups[k])
+                          for k in groups}
+                theta, server_state, delta = self._cloud_fuse(
+                    method, edge_theta, alphas, theta, server_opt,
+                    server_state)
+                self._anchor = theta
+                for k in groups:       # broadcast fused model to edges
+                    edge_theta[k] = theta
+                    version[k] += 1
+                self.trace.log(t, CLOUD_AGG, round=fusions - 1,
+                               n_edges=len(groups))
+                if (fusions - 1) % eval_every == 0 \
+                        or fusions == global_rounds:
+                    self._record_eval(history, fusions - 1, t, theta,
+                                      window_losses, delta, log,
+                                      f"async/{method}")
+                    # reset only once recorded, so with eval_every > 1
+                    # the loss covers every window since the last eval
+                    window_losses = []
+                if delta <= fc.xi:
+                    break
+                if fusions < global_rounds:
+                    queue.push(Event(t + period, CLOUD_AGG))
+        return self._finish_history(history, theta, client_losses)
+
+    # ------------------------------------------------------------------
+    def _dispatch(self, ready: List[int], k: int, t: float, theta_k,
+                  version_k: int, states, queue) -> None:
+        fed = self.fed
+        locals_, _, loss_map = fed._edge_round(
+            ready, theta_k, self._steps, self._iters,
+            use_split=self._use_split_dyn,
+            prox_anchor=(self._anchor if self._method == "fedprox"
+                         else None))
+        for lora_n, n in zip(locals_, ready):
+            dur = self._round_seconds(n, self._use_split_dyn, self._steps,
+                                      k, states[n].rounds_run)
+            f_n = self.churn.finish_time(n, t, dur)
+            states[n].dispatch(t, f_n, version_k, states[n].rounds_run)
+            queue.push(Event(f_n, ARRIVAL, n, k,
+                             payload=(lora_n, loss_map[n])))
+            self.trace.log(t, DISPATCH, n, k, version=version_k)
+
+
+SCHEDULERS = {"sync": SyncScheduler, "deadline": DeadlineScheduler,
+              "async": AsyncScheduler}

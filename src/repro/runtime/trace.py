@@ -1,0 +1,57 @@
+"""Event-trace recorder: an append-only log of simulator events.
+
+The trace is the runtime's audit surface: determinism tests assert two
+runs with the same seed+config produce *identical* traces, and the
+time-to-accuracy benchmark mines it for per-policy round/straggler
+statistics.  Records are plain tuples so equality is exact.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+Record = Tuple[float, str, int, int, Tuple]
+
+
+class EventTrace:
+    def __init__(self) -> None:
+        self.records: List[Record] = []
+
+    def log(self, time: float, kind: str, client: int = -1, edge: int = -1,
+            **info: Any) -> None:
+        # info flattened to a sorted tuple of (key, value) pairs so records
+        # are hashable/comparable and insertion-order independent
+        packed = tuple(sorted((k, _freeze(v)) for k, v in info.items()))
+        self.records.append((float(time), kind, int(client), int(edge),
+                             packed))
+
+    # -- queries -----------------------------------------------------------
+    def of_kind(self, kind: str) -> List[Record]:
+        return [r for r in self.records if r[1] == kind]
+
+    def count(self, kind: str) -> int:
+        return len(self.of_kind(kind))
+
+    def end_time(self) -> float:
+        return self.records[-1][0] if self.records else 0.0
+
+    def summary(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for r in self.records:
+            out[r[1]] = out.get(r[1], 0) + 1
+        return out
+
+    def __len__(self) -> int:
+        return len(self.records)
+
+    def __eq__(self, other: object) -> bool:
+        return (isinstance(other, EventTrace)
+                and self.records == other.records)
+
+
+def _freeze(v: Any):
+    """Make a value hashable/comparable for trace records."""
+    if isinstance(v, (list, tuple)):
+        return tuple(_freeze(x) for x in v)
+    if isinstance(v, float):
+        return round(v, 9)       # exact same arithmetic -> exact same round
+    return v

@@ -145,3 +145,59 @@ def test_comm_model_eq22_24():
     assert abs(t - (2 * 2 * 8 * 128 * 4 * 768 / 2.0) / 1e7) < 1e-9
     total = cm.total_comm_time(cc, [8, 16], [1e7, 1e7], 10)
     assert total == 10 * cm.client_comm_time(cc, 16, 1e7)
+
+
+def test_comm_model_monotonicity_and_straggler_bound():
+    import dataclasses
+
+    base = cm.CommConfig(t_rounds=2, bytes_per_param=4, seq_len=64,
+                         d_hidden=768, rho=1.0, lora_bytes=500_000)
+    # Eq. 23: time strictly decreases as rho grows (more compression)...
+    times = [cm.client_comm_time(dataclasses.replace(base, rho=r), 16, 1e7)
+             for r in (1.0, 2.0, 3.3, 8.0)]
+    assert all(a > b for a, b in zip(times, times[1:]))
+    # ...and as bandwidth grows
+    bws = [cm.client_comm_time(base, 16, bw) for bw in (1e6, 1e7, 1e8)]
+    assert all(a > b for a, b in zip(bws, bws[1:]))
+    # Eq. 24 is the straggler max: total >= G * every client's own time
+    batches, bands = [8.0, 16.0, 24.0], [2e7, 1e7, 5e6]
+    total = cm.total_comm_time(base, batches, bands, 7)
+    for b, bw in zip(batches, bands):
+        assert total >= 7 * cm.client_comm_time(base, b, bw) - 1e-12
+    # Eq. 22 volume scales linearly in the summed batch sizes
+    v1 = cm.round_volume_bytes(base, {0: [8.0]}, n_edges=1)
+    v2 = cm.round_volume_bytes(base, {0: [16.0]}, n_edges=1)
+    assert abs((v2 - base.lora_bytes) - 2 * (v1 - base.lora_bytes)) < 1e-6
+
+
+def test_comm_config_from_derives_real_shapes():
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.core.sketch import make_plan
+    from repro.federation.simulation import FedConfig
+    from repro.models.bert import bert_specs
+    from repro.models.params import init_tree
+    import jax
+
+    cfg = get_config("bert-base").reduced().with_(
+        num_layers=4, param_dtype="float32", activation_dtype="float32")
+    fed = FedConfig(n_clients=4, t_rounds=3, seq_len=48, num_classes=4)
+    plan = make_plan(cfg.d_model, 3, 20, seed=0)
+
+    cc = cm.comm_config_from(cfg, fed, plan)
+    assert cc.d_hidden == cfg.d_model
+    assert cc.seq_len == 48 and cc.t_rounds == 3
+    assert cc.bytes_per_param == 4.0
+    assert abs(cc.rho - cfg.d_model / (3 * 20)) < 1e-9
+    # lora_bytes from the spec tree == bytes of the materialized tree
+    tree = init_tree(bert_specs(cfg, 4)["lora"], jax.random.PRNGKey(0))
+    manual = sum(l.size * l.dtype.itemsize
+                 for l in jax.tree_util.tree_leaves(tree))
+    assert cc.lora_bytes == manual
+    assert cm.lora_tree_bytes(tree) == manual
+    # no plan -> uncompressed (rho = 1)
+    assert cm.comm_config_from(cfg, fed, None).rho == 1.0
+    # per-dtype zeta: bf16 halves the activation bytes
+    cfg16 = cfg.with_(activation_dtype="bfloat16")
+    assert cm.comm_config_from(cfg16, fed, plan).bytes_per_param == 2.0

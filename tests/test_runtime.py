@@ -1,0 +1,161 @@
+"""Event-driven edge runtime: sync parity, determinism, policy behavior.
+
+Parity needs no x64 tricks here (unlike the batched-vs-reference engine
+tests): the sync scheduler issues the *exact same* sequence of compiled
+training and aggregation calls as ``Federation.run`` on the same
+backend, so histories must match bit-for-bit in plain float32.
+"""
+import numpy as np
+import pytest
+
+from repro.core.split_training import Split
+from repro.federation.simulation import FedConfig, Federation
+from repro.federation.topology import (ChurnTrace, always_on,
+                                       make_churn_trace, make_topology)
+from repro.runtime import EdgeRuntime, RuntimeConfig
+from repro.runtime.events import Event, EventQueue
+
+SMALL_KW = dict(n_clients=6, n_edges=2, alpha=0.2, poisoned=(4,),
+                total_examples=600, probe_q=8, local_warmup_steps=2,
+                lr=2e-2, bert_layers=4, t_rounds=1, batch_size=16, seed=0)
+
+
+# ---------------------------------------------------------------------------
+# pure-core pieces (no model, fast)
+# ---------------------------------------------------------------------------
+
+def test_event_queue_deterministic_fifo_ties():
+    q = EventQueue()
+    q.push(Event(2.0, "b", client=1))
+    q.push(Event(1.0, "a", client=2))
+    q.push(Event(1.0, "a", client=3))     # same time: FIFO, not client order
+    assert [e.client for e in q.drain_until(1.0)] == [2, 3]
+    assert q.pop().client == 1
+    assert not q
+
+
+def test_churn_trace_pause_resume():
+    tr = ChurnTrace([np.array([[5.0, 8.0], [20.0, 25.0]])], 100.0)
+    assert tr.is_online(0, 4.9) and not tr.is_online(0, 5.0)
+    assert tr.next_online(0, 6.0) == 8.0
+    # 4s of work from t=3: 2s before the outage, pause 5..8, 2s after
+    assert tr.finish_time(0, 3.0, 4.0) == pytest.approx(10.0)
+    # work started inside an outage begins at rejoin
+    assert tr.finish_time(0, 6.0, 1.0) == pytest.approx(9.0)
+    # work spanning two outages pauses across both
+    assert tr.finish_time(0, 3.0, 20.0) == pytest.approx(31.0)
+
+
+def test_make_churn_trace_deterministic_and_bounded():
+    a = make_churn_trace(8, 500.0, churn_frac=0.5, seed=3)
+    b = make_churn_trace(8, 500.0, churn_frac=0.5, seed=3)
+    for ia, ib in zip(a.offline, b.offline):
+        np.testing.assert_array_equal(ia, ib)
+    churny = sum(len(iv) > 0 for iv in a.offline)
+    assert churny <= 4                     # only churn_frac of clients cycle
+    assert all(tr.shape[1] == 2 for tr in a.offline if tr.size)
+    on = always_on(8)
+    assert on.is_online(3, 1e9) and on.finish_time(3, 2.0, 5.0) == 7.0
+
+
+def test_cost_model_monotone_in_capacity_and_split():
+    from repro.core.comm_model import comm_config_from
+    from repro.runtime.cost import ClientCostModel
+    from repro.configs import get_config
+
+    cfg = get_config("bert-base").reduced().with_(
+        num_layers=8, param_dtype="float32", activation_dtype="float32")
+    topo = make_topology(4, 2, seed=0)
+    topo.capacity[:] = [1e9, 2e9, 4e9, 8e9]
+    topo.bandwidth[:] = 1e7
+    fed = FedConfig(n_clients=4, n_edges=2)
+    comm = comm_config_from(cfg, fed)
+    cm = ClientCostModel(cfg, topo, comm, batch_size=16, num_classes=4)
+    ts = [cm.round_cost(n, Split(2, 4, 2), 4).total_s for n in range(4)]
+    assert ts == sorted(ts, reverse=True)  # faster device -> less time
+    # deeper client-side split -> more client FLOPs -> more time
+    shallow = cm.round_cost(0, Split(1, 5, 2), 4).total_s
+    deep = cm.round_cost(0, Split(3, 3, 2), 4).total_s
+    assert deep > shallow
+    assert cm.round_cost(0, Split(2, 4, 2), 4).comm_s > 0
+
+
+def test_constrained_frac_reaches_topology_through_fedconfig():
+    base = Federation(FedConfig(**SMALL_KW))
+    slow = Federation(FedConfig(**dict(SMALL_KW, constrained_frac=0.5)))
+    assert slow.topo.capacity.min() < base.topo.capacity.min()
+    assert (slow.topo.bandwidth <= base.topo.bandwidth + 1e-9).all()
+    assert (slow.topo.capacity <= base.topo.capacity + 1e-9).all()
+
+
+# ---------------------------------------------------------------------------
+# full-runtime behavior (reduced BERT; module-scoped federations)
+# ---------------------------------------------------------------------------
+
+def test_sync_policy_reproduces_run_history():
+    """Acceptance: runtime policy='sync' == Federation.run bit-for-bit."""
+    h_ref = Federation(FedConfig(**SMALL_KW)).run(
+        "elsa", global_rounds=2, steps_per_round=2)
+    h_sync = Federation(FedConfig(**SMALL_KW)).run(
+        "elsa", global_rounds=2, steps_per_round=2,
+        runtime=RuntimeConfig(policy="sync"))
+    assert h_sync["accuracy"] == h_ref["accuracy"]
+    assert h_sync["loss"] == h_ref["loss"]
+    assert h_sync["delta"] == h_ref["delta"]
+    assert h_sync["round"] == h_ref["round"]
+    for n in range(SMALL_KW["n_clients"]):
+        assert h_sync["client_losses"][n] == h_ref["client_losses"][n]
+    # and it gained a strictly increasing wall-clock axis
+    t = h_sync["time"]
+    assert len(t) == len(h_sync["round"]) and all(
+        b > a for a, b in zip(t, t[1:]))
+
+
+def _churny_config():
+    kw = dict(SMALL_KW, constrained_frac=0.34, seed=1)
+    churn = make_churn_trace(kw["n_clients"], 10_000.0, mean_on_s=40.0,
+                             mean_off_s=15.0, churn_frac=0.5, seed=2)
+    return kw, churn
+
+
+@pytest.mark.parametrize("policy", ["deadline", "async"])
+def test_runtime_deterministic_same_seed(policy):
+    """Acceptance: same seed + config => identical event trace and
+    final accuracy."""
+    kw, churn = _churny_config()
+    hs = []
+    for _ in range(2):
+        fed = Federation(FedConfig(**kw))
+        hs.append(fed.run("fedavg", global_rounds=2, steps_per_round=2,
+                          runtime=RuntimeConfig(policy=policy,
+                                                churn=churn)))
+    a, b = hs
+    assert a["trace"] == b["trace"] and len(a["trace"]) > 0
+    assert a["final_accuracy"] == b["final_accuracy"]
+    assert a["time"] == b["time"]
+    assert a["loss"] == b["loss"]
+
+
+def test_deadline_and_async_structure_under_churn():
+    kw, churn = _churny_config()
+    fed = Federation(FedConfig(**kw))
+    h_d = fed.run("elsa-nocluster", global_rounds=2, steps_per_round=2,
+                  runtime=RuntimeConfig(policy="deadline", churn=churn))
+    tr = h_d["trace"]
+    assert tr.count("edge_agg") >= 2          # every edge round aggregated
+    assert all(np.isfinite(h_d["accuracy"]))
+    assert h_d["time"] == sorted(h_d["time"])
+    # every aggregation folded at least one update
+    for rec in tr.of_kind("edge_agg"):
+        info = dict(rec[4])
+        assert info["n_updates"] >= 1
+
+    fed2 = Federation(FedConfig(**kw))
+    h_a = fed2.run("elsa-nocluster", global_rounds=2, steps_per_round=2,
+                   runtime=RuntimeConfig(policy="async", churn=churn))
+    tra = h_a["trace"]
+    assert tra.count("cloud_agg") == 2
+    for rec in tra.of_kind("arrival"):
+        info = dict(rec[4])
+        assert info["staleness"] >= 0 and 0 < info["weight"] <= 1
+    assert np.isfinite(h_a["final_accuracy"])
