@@ -17,7 +17,7 @@ def run(alphas=(0.1, 0.2), rounds=5, steps=5):
         fed = Federation(FedConfig(
             n_clients=8, n_edges=2, alpha=alpha, poisoned=(2, 7),
             total_examples=2000, probe_q=16, local_warmup_steps=5,
-            lr=3e-2, bert_layers=4, t_rounds=1))
+            lr=3e-2, layers=4, t_rounds=1))
         t0 = time.perf_counter()
         res = {}
         for method in ("elsa", "fedavg", "fedavg-random"):

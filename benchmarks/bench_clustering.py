@@ -13,7 +13,7 @@ def run():
     fed = Federation(FedConfig(n_clients=20, n_edges=4, alpha=0.1,
                                poisoned=(3, 8, 12, 17), total_examples=1200,
                                probe_q=24, local_warmup_steps=8,
-                               bert_layers=4))
+                               layers=4))
 
     (div, trust, cres, _), us = timeit(fed.profile_clients, repeats=1,
                                        warmup=0)

@@ -45,7 +45,7 @@ def run(d=768, y=3, n=256, seed=0):
         fed = Federation(FedConfig(n_clients=8, n_edges=2, alpha=0.2,
                                    poisoned=(), total_examples=1600,
                                    probe_q=16, local_warmup_steps=4,
-                                   lr=2e-2, rho=rho, bert_layers=4,
+                                   lr=2e-2, rho=rho, layers=4,
                                    t_rounds=1))
         hist = fed.run("elsa", global_rounds=6, steps_per_round=6)
         accs[rho] = hist["final_accuracy"]

@@ -1,12 +1,17 @@
 """One-global-round wall-clock: sequential reference vs batched engine.
 
 Times ``Federation.run`` for a single global round on the ISSUE's
-acceptance configuration — 20 clients, 4 local steps, reduced 4-layer
-BERT, CPU — with method ``fedavg`` (all clients in one group, dynamic
+acceptance configuration — 20 clients, 4 local steps, a reduced 4-layer
+model, CPU — with method ``fedavg`` (all clients in one group, dynamic
 splits and the SS-OP∘sketch channel active, no profiling phase) so the
 measurement isolates local split training + aggregation.  Each backend
 gets one warmup run first (compiles round functions, builds per-client
 channels), then the timed run; speedup = reference / batched.
+
+``--model`` selects any architecture registered in
+:mod:`repro.models.split_api` (default: the paper's ``bert-base``
+encoder; e.g. ``llama3-8b`` exercises the causal-LM split path) — CI
+runs the quick smoke on both registered families.
 
 Writes ``BENCH_fed_round.json`` at the repo root via
 ``benchmarks.common.write_json`` and prints the usual CSV line.
@@ -21,36 +26,39 @@ OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
                         "BENCH_fed_round.json")
 
 
-def _config(clients=20):
+def _config(clients=20, model="bert-base"):
     return dict(n_clients=clients, n_edges=4, alpha=0.1,
                 poisoned=(3, 8, 12, 17), total_examples=2000, probe_q=16,
-                local_warmup_steps=2, bert_layers=4, lr=5e-3, t_rounds=1,
-                batch_size=16)
+                local_warmup_steps=2, layers=4, lr=5e-3, t_rounds=1,
+                batch_size=16, model=model)
 
 
-def _time_round(backend: str, steps: int, clients: int) -> float:
-    fed = Federation(FedConfig(**_config(clients)), backend=backend)
+def _time_round(backend: str, steps: int, clients: int,
+                model: str) -> float:
+    fed = Federation(FedConfig(**_config(clients, model)), backend=backend)
     fed.run("fedavg", global_rounds=1, steps_per_round=steps)   # warmup
     t0 = time.perf_counter()
     fed.run("fedavg", global_rounds=1, steps_per_round=steps)
     return time.perf_counter() - t0
 
 
-def run(steps: int = 4, clients: int = 20, write: bool = True):
-    t_batched = _time_round("batched", steps, clients)
-    t_reference = _time_round("reference", steps, clients)
+def run(steps: int = 4, clients: int = 20, model: str = "bert-base",
+        write: bool = True):
+    t_batched = _time_round("batched", steps, clients, model)
+    t_reference = _time_round("reference", steps, clients, model)
     speedup = t_reference / t_batched
     payload = {
         "config": {"clients": clients, "steps_per_round": steps,
-                   "bert_layers": 4, "t_rounds": 1, "batch_size": 16,
-                   "method": "fedavg", "device": "cpu"},
+                   "model": model, "layers": 4, "t_rounds": 1,
+                   "batch_size": 16, "method": "fedavg", "device": "cpu"},
         "reference_s": round(t_reference, 3),
         "batched_s": round(t_batched, 3),
         "speedup": round(speedup, 2),
     }
     if write:
         write_json(os.path.abspath(OUT_PATH), payload)
-    emit("fed_round_reference", t_reference * 1e6, f"{clients}x{steps}steps")
+    emit("fed_round_reference", t_reference * 1e6,
+         f"{model}:{clients}x{steps}steps")
     emit("fed_round_batched", t_batched * 1e6, f"speedup={speedup:.2f}x")
     return payload
 
@@ -60,8 +68,11 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="tiny CI smoke configuration (no BENCH json)")
+    ap.add_argument("--model", default="bert-base",
+                    help="registered split-model name (bert-base, "
+                         "llama3-8b, ...)")
     args = ap.parse_args()
     if args.quick:
-        print(run(steps=2, clients=6, write=False))
+        print(run(steps=2, clients=6, model=args.model, write=False))
     else:
-        print(run())
+        print(run(model=args.model))

@@ -47,7 +47,7 @@ def _scenario(quick: bool):
     if quick:
         fed = dict(n_clients=6, n_edges=2, alpha=0.2, poisoned=(4,),
                    total_examples=600, probe_q=8, local_warmup_steps=2,
-                   bert_layers=4, lr=2e-2, t_rounds=1, batch_size=16,
+                   layers=4, lr=2e-2, t_rounds=1, batch_size=16,
                    constrained_frac=0.34, seed=0)
         run = dict(global_rounds=3, steps_per_round=2)
         churn = dict(mean_on_s=40.0, mean_off_s=15.0, churn_frac=0.5,
@@ -55,7 +55,7 @@ def _scenario(quick: bool):
     else:
         fed = dict(n_clients=20, n_edges=4, alpha=0.1,
                    poisoned=(3, 8, 12, 17), total_examples=2000,
-                   probe_q=16, local_warmup_steps=2, bert_layers=4,
+                   probe_q=16, local_warmup_steps=2, layers=4,
                    lr=2e-2, t_rounds=1, batch_size=16,
                    constrained_frac=0.3, seed=0)
         run = dict(global_rounds=8, steps_per_round=4)

@@ -35,7 +35,7 @@ def main():
 
     fed_kw = dict(n_clients=args.clients, n_edges=args.edges, alpha=0.2,
                   poisoned=(2,), total_examples=1500, probe_q=16,
-                  local_warmup_steps=4, bert_layers=4, lr=2e-2,
+                  local_warmup_steps=4, layers=4, lr=2e-2,
                   t_rounds=1, constrained_frac=args.constrained)
     churn = None
     if args.churn:

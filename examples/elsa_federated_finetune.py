@@ -4,10 +4,15 @@ coherence/trust-weighted cloud fusion, with checkpointing.
 
   PYTHONPATH=src python examples/elsa_federated_finetune.py \
       [--rounds 10] [--clients 20] [--method elsa] [--full] \
-      [--backend batched|reference]
+      [--model bert-base|llama3-8b|...] [--backend batched|reference]
 
---full uses the paper's 20-client / 4-edge / BERT-8L setup (slow on CPU);
+--full uses the paper's 20-client / 4-edge / 8-layer setup (slow on CPU);
 the default is a reduced config that finishes in a few minutes.
+
+--model picks any architecture registered in the SplitModel registry
+(docs/models.md): the paper's "bert-base" encoder by default, or a
+dense causal LM ("llama3-8b", "qwen2.5-3b", "olmo-1b", "qwen1.5-4b")
+trained with next-token CE on the same synthetic corpus.
 
 --backend batched (default) runs local training through the compiled
 vmap/scan federation engine (clients stacked per split bucket, one
@@ -32,6 +37,8 @@ def main():
     ap.add_argument("--edges", type=int, default=3)
     ap.add_argument("--alpha", type=float, default=0.1)
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--model", default="bert-base",
+                    help="registered split-model name (see docs/models.md)")
     ap.add_argument("--backend", default="batched",
                     choices=["batched", "reference"])
     ap.add_argument("--out", default="runs/elsa_finetune")
@@ -40,13 +47,13 @@ def main():
     if args.full:
         cfg = FedConfig(n_clients=20, n_edges=4, alpha=args.alpha,
                         poisoned=(3, 8, 12, 17), total_examples=4000,
-                        bert_layers=8, lr=2e-2, t_rounds=2)
+                        layers=8, lr=2e-2, t_rounds=2, model=args.model)
     else:
         cfg = FedConfig(n_clients=args.clients, n_edges=args.edges,
                         alpha=args.alpha, poisoned=(2,),
                         total_examples=1500, probe_q=16,
-                        local_warmup_steps=4, bert_layers=4, lr=2e-2,
-                        t_rounds=1)
+                        local_warmup_steps=4, layers=4, lr=2e-2,
+                        t_rounds=1, model=args.model)
     fed = Federation(cfg, backend=args.backend)
 
     print(f"== phase 1: profiling {cfg.n_clients} clients ==")

@@ -58,20 +58,27 @@ def comm_config_from(cfg, fed, plan=None, *, lora=None,
 
     ``fed`` is any object with ``t_rounds``/``seq_len``/``num_classes``
     attributes (a :class:`~repro.federation.simulation.FedConfig`).
-    """
-    from repro.models.bert import bert_specs
 
+    Model shapes come from the :class:`~repro.models.split_api.SplitModel`
+    adapter of ``cfg`` — the LoRA upload is priced off ``lora_specs`` and
+    the boundary width off ``activation_shape``, so any registered
+    architecture (encoder or causal LM) gets correct Eq. 22–24 constants.
+    """
+    from repro.models.split_api import split_model_for
+
+    model = split_model_for(cfg)
     zeta = float(np.dtype(cfg.activation_dtype).itemsize)
     rho = float(plan.rho) if plan is not None else 1.0
     if lora is None:
-        lora = bert_specs(cfg, num_classes or getattr(fed, "num_classes", 2)
-                          )["lora"]
+        lora = model.lora_specs(num_classes
+                                or getattr(fed, "num_classes", 2))
     lb = lora_tree_bytes(lora, np.dtype(cfg.param_dtype).itemsize)
     return CommConfig(
         t_rounds=int(fed.t_rounds), bytes_per_param=zeta,
         seq_len=int(seq_len if seq_len is not None
                     else getattr(fed, "seq_len", cfg.max_position_embeddings)),
-        d_hidden=int(cfg.d_model), rho=rho, lora_bytes=lb)
+        d_hidden=int(model.activation_shape(1, 1)[-1]), rho=rho,
+        lora_bytes=lb)
 
 
 def round_volume_bytes(cc: CommConfig, batch_sizes_per_edge: Dict[int, List[float]],

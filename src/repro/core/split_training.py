@@ -1,25 +1,29 @@
-"""Tripartite split training (ELSA §III.B.2–3).
+"""Tripartite split training (ELSA §III.B.2–3), model-agnostic.
 
-The model stack is cut at (p, p+q): Part 1 (embedding + blocks[:p], client),
-Part 2 (blocks[p:p+q], edge), Part 3 (blocks[p+q:] + head, client).
-Activations crossing each cut pass through the ELSA channel
+The model stack is cut at (p, p+q): Part 1 (embedding + blocks[:p],
+client), Part 2 (blocks[p:p+q], edge), Part 3 (blocks[p+q:] + head,
+client).  Activations crossing each cut pass through the ELSA channel
 (SS-OP -> count-sketch -> median-decode -> SS-OPᵀ).  The channel is a
 composition of linear maps, so JAX autodiff's VJP is exactly the paper's
 symmetric backward path (gradients compressed the same way, with Q_nᵀ
 restoring rotation exactly).
+
+Every entry point takes a :class:`~repro.models.split_api.SplitModel`
+(or, as a back-compat shim, an ``ArchConfig``, which is adapted through
+the split-model registry) — split training itself never names an
+architecture.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, NamedTuple, Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.sketch import SketchPlan, compress, decompress
 from repro.core.ssop import SSOP, apply_ssop, apply_ssop_inverse
-from repro.models import bert as bert_mod
-from repro.models.zoo import classification_loss, per_example_ce
+from repro.models.split_api import as_split_model
 
 
 class Channel(NamedTuple):
@@ -55,38 +59,40 @@ class Split:
     o: int
 
 
-def split_forward(cfg, frozen, lora, tokens, split: Split,
+def split_forward(model, frozen, lora, tokens, split: Split,
                   channel: Channel = IDENTITY_CHANNEL,
                   mask_valid=None):
-    """BERT split forward pass; returns (cls, logits, h_up, h_down)."""
-    x = bert_mod.embed(cfg, frozen, tokens)
+    """Split forward pass; returns (repr, logits, h_up, h_down).
+
+    ``model`` is a :class:`~repro.models.split_api.SplitModel` (an
+    ``ArchConfig`` is adapted via the registry).
+    """
+    m = as_split_model(model)
+    x = m.embed(frozen, tokens)
     # Part 1 (client)
-    h_up = bert_mod.run_blocks(cfg, frozen, lora, x, 0, split.p, mask_valid)
+    h_up = m.run_blocks(frozen, lora, x, 0, split.p, mask_valid)
     h_up_t = channel(h_up)
     # Part 2 (edge)
-    h_down = bert_mod.run_blocks(cfg, frozen, lora, h_up_t,
-                                 split.p, split.p + split.q, mask_valid)
+    h_down = m.run_blocks(frozen, lora, h_up_t,
+                          split.p, split.p + split.q, mask_valid)
     h_down_t = channel(h_down)
     # Part 3 (client)
-    x = bert_mod.run_blocks(cfg, frozen, lora, h_down_t,
-                            split.p + split.q, cfg.num_layers, mask_valid)
-    cls = x[:, 0, :]
-    pooled = jnp.tanh(cls @ lora["pooler"]["w"].astype(cls.dtype)
-                      + lora["pooler"]["b"].astype(cls.dtype))
-    logits = pooled @ lora["head"]["w"].astype(cls.dtype) \
-        + lora["head"]["b"].astype(cls.dtype)
-    return cls, logits, h_up, h_down
+    x = m.run_blocks(frozen, lora, h_down_t,
+                     split.p + split.q, m.num_blocks, mask_valid)
+    repr_, logits = m.head(frozen, lora, x)
+    return repr_, logits, h_up, h_down
 
 
-def split_loss(cfg, frozen, lora, batch, split: Split,
+def split_loss(model, frozen, lora, batch, split: Split,
                channel: Channel = IDENTITY_CHANNEL):
-    _, logits, _, _ = split_forward(cfg, frozen, lora, batch["tokens"],
+    m = as_split_model(model)
+    _, logits, _, _ = split_forward(m, frozen, lora, batch["tokens"],
                                     split, channel,
                                     batch.get("mask_valid"))
-    return classification_loss(logits, batch["labels"])
+    return jnp.mean(m.per_example_loss(logits, batch))
 
 
-def weighted_split_loss(cfg, frozen, lora, batch, split: Split,
+def weighted_split_loss(model, frozen, lora, batch, split: Split,
                         channel: Channel = IDENTITY_CHANNEL):
     """``split_loss`` with per-example weights: Σ w_i ℓ_i / Σ w_i.
 
@@ -96,17 +102,21 @@ def weighted_split_loss(cfg, frozen, lora, batch, split: Split,
     contributions exactly, so a fully-weighted batch reproduces
     ``split_loss`` bit-for-bit (examples are independent across the batch
     axis — attention, layernorm, and the SS-OP∘sketch channel all act
-    per example).
+    per example).  An all-zero weight vector (a padded *client* row from
+    cohort bucket padding) yields exactly zero loss and gradients
+    instead of 0/0.
     """
-    _, logits, _, _ = split_forward(cfg, frozen, lora, batch["tokens"],
+    m = as_split_model(model)
+    _, logits, _, _ = split_forward(m, frozen, lora, batch["tokens"],
                                     split, channel,
                                     batch.get("mask_valid"))
-    per = per_example_ce(logits, batch["labels"])
+    per = m.per_example_loss(logits, batch)
     w = batch["weights"].astype(per.dtype)
-    return jnp.sum(per * w) / jnp.sum(w)
+    s = jnp.sum(w)
+    return jnp.sum(per * w) / jnp.where(s > 0, s, jnp.ones_like(s))
 
 
-def split_train_step(cfg, split: Split, channel: Channel, optimizer, *,
+def split_train_step(model, split: Split, channel: Channel, optimizer, *,
                      donate: bool = False):
     """Build a compiled (frozen, lora, opt_state, batch) -> ... step.
 
@@ -119,9 +129,11 @@ def split_train_step(cfg, split: Split, channel: Channel, optimizer, *,
     For whole-round compilation across a client population see
     :mod:`repro.federation.engine`.
     """
+    m = as_split_model(model)
+
     def step(frozen, lora, opt_state, batch):
         loss, grads = jax.value_and_grad(
-            lambda lp: split_loss(cfg, frozen, lp, batch, split, channel)
+            lambda lp: split_loss(m, frozen, lp, batch, split, channel)
         )(lora)
         lora_new, opt_state = optimizer.update(lora, grads, opt_state)
         return lora_new, opt_state, loss

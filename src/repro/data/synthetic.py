@@ -1,4 +1,4 @@
-"""Synthetic non-IID text-classification corpora.
+"""Synthetic non-IID text corpora (classification and causal-LM tasks).
 
 Public NLP datasets are unavailable offline; we generate class-conditional
 token sequences (each class has a distinct unigram distribution over a
@@ -8,6 +8,17 @@ task, and reproduce the paper's heterogeneity controls:
 - label skew: Dirichlet(alpha) class proportions per client (§IV.A),
 - quantity skew: |D_n| ∝ chi_n = (n+1)/Omega_k (§IV.A),
 - unreliable clients: label poisoning on a chosen subset (§IV.A).
+
+The same corpora serve two tasks, matching the two ``SplitModel`` task
+kinds (:mod:`repro.models.split_api`):
+
+- ``task_kind="classification"`` (encoders): predict the class label;
+  unreliable clients get a fraction of labels randomly flipped;
+- ``task_kind="causal-lm"`` (decoder-only LMs): next-token prediction —
+  the class-conditional unigram structure is what makes the text
+  learnable; unreliable clients get a fraction of their *sequences*
+  scrambled to uniform-random tokens (labels never enter the LM loss,
+  so label flips would be invisible there).
 """
 from __future__ import annotations
 
@@ -96,13 +107,30 @@ def poison_labels(labels: np.ndarray, frac: float, num_classes: int,
     return labels
 
 
+def poison_tokens(tokens: np.ndarray, frac: float, vocab_size: int,
+                  rng) -> np.ndarray:
+    """Scramble a fraction of sequences to uniform-random tokens — the
+    causal-LM analogue of label poisoning (unreliable *text*, since
+    labels never enter the next-token loss)."""
+    tokens = tokens.copy()
+    n = len(tokens)
+    idx = rng.choice(n, size=int(frac * n), replace=False)
+    tokens[idx] = rng.integers(0, vocab_size,
+                               size=(len(idx), tokens.shape[1]))
+    return tokens
+
+
 def make_federation_data(cfg: SyntheticTaskConfig, num_clients: int,
                          total_examples: int, alpha: float,
                          poisoned_clients: Tuple[int, ...] = (),
                          poison_frac: float = 0.5,
-                         seed: int = 0) -> Dict[int, ClientData]:
+                         seed: int = 0,
+                         task_kind: str = "classification"
+                         ) -> Dict[int, ClientData]:
     """Full §IV.A data generation: Dirichlet label skew + quantity skew +
-    poisoning."""
+    poisoning.  ``task_kind`` selects how unreliable clients corrupt
+    their data: label flips ("classification") or sequence scrambles
+    ("causal-lm"); the underlying corpora are identical."""
     rng = np.random.default_rng(seed)
     class_p = make_task(cfg)
     props = dirichlet_partition(num_clients, cfg.num_classes, alpha, seed + 1)
@@ -112,7 +140,12 @@ def make_federation_data(cfg: SyntheticTaskConfig, num_clients: int,
         labels = rng.choice(cfg.num_classes, size=sizes[n], p=props[n])
         tokens = sample_examples(cfg, class_p, labels, rng)
         if n in poisoned_clients:
-            labels = poison_labels(labels, poison_frac, cfg.num_classes, rng)
+            if task_kind == "causal-lm":
+                tokens = poison_tokens(tokens, poison_frac, cfg.vocab_size,
+                                       rng)
+            else:
+                labels = poison_labels(labels, poison_frac,
+                                       cfg.num_classes, rng)
         out[n] = ClientData(tokens=tokens, labels=labels.astype(np.int32),
                             poisoned=n in poisoned_clients)
     return out

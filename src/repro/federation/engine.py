@@ -22,9 +22,19 @@ compiles one whole local round per split configuration:
   per client-step.
 
 Clients are bucketed by their ``Split`` configuration; each bucket
-compiles once and is reused every round.  The FedProx anchor term
+compiles once and is reused every round.  Cohorts are additionally
+padded up to a small ladder of fixed sizes (:data:`BUCKET_LADDER`) with
+zero-weight phantom clients, so schedulers that dispatch varying-size
+ready sets (the deadline policy's straggler carry-over, churny async
+rounds) reuse one compiled executable per (split, bucket size) instead
+of recompiling for every distinct cohort size.  The FedProx anchor term
 vectorizes by broadcasting the shared anchor tree against the
 client-stacked parameters (:func:`repro.optim.fedprox_gradient`).
+
+The engine is model-agnostic: it dispatches on the
+:class:`~repro.models.split_api.SplitModel` protocol, so any registered
+architecture (BERT encoder, dense causal LMs, ...) runs through the same
+compiled path.
 """
 from __future__ import annotations
 
@@ -38,9 +48,26 @@ from repro.core.sketch import SketchPlan
 from repro.core.split_training import Channel, Split, weighted_split_loss
 from repro.core.ssop import SSOP
 from repro.data.pipeline import stack_padded_batches
+from repro.models.split_api import as_split_model
 from repro.optim import fedprox_gradient
 
 PROX_MU = 0.01   # matches the reference path's hardcoded FedProx weight
+
+#: Cohort sizes the engine compiles for.  Every size <= 8 is exact (small
+#: federations and parity tests see zero padding); above that the ladder
+#: grows geometrically (<= 25% padding waste), bounding the number of
+#: compiled executables per split at O(log N) instead of O(N distinct
+#: cohort sizes).
+BUCKET_LADDER = (1, 2, 3, 4, 5, 6, 7, 8, 10, 12, 14, 16,
+                 20, 24, 28, 32, 40, 48, 56, 64)
+
+
+def bucket_size(n: int) -> int:
+    """Smallest ladder size >= n (multiples of 16 beyond the ladder)."""
+    for s in BUCKET_LADDER:
+        if s >= n:
+            return s
+    return -(-n // 16) * 16
 
 
 # ---------------------------------------------------------------------------
@@ -76,6 +103,12 @@ def stack_ssops(ssops: Sequence[SSOP]) -> SSOP:
                 w_inv=field("w_inv"))
 
 
+def _pad_axis1(arr: np.ndarray, pad: int) -> np.ndarray:
+    """Append ``pad`` zero rows along the client axis (axis 1)."""
+    z = np.zeros((arr.shape[0], pad) + arr.shape[2:], arr.dtype)
+    return np.concatenate([arr, z], axis=1)
+
+
 # ---------------------------------------------------------------------------
 # engine
 # ---------------------------------------------------------------------------
@@ -88,10 +121,12 @@ class BatchedEngine:
     jit, so steady-state rounds run with zero retracing.
     """
 
-    def __init__(self, cfg, frozen, plan: Optional[SketchPlan], *,
+    def __init__(self, model, frozen, plan: Optional[SketchPlan], *,
                  lr: float, batch_size: int, use_channel: bool,
-                 use_ssop: bool, prox_mu: float = PROX_MU):
-        self.cfg = cfg
+                 use_ssop: bool, prox_mu: float = PROX_MU,
+                 pad_cohorts: bool = True):
+        self.model = as_split_model(model)
+        self.cfg = self.model.cfg
         self.frozen = frozen
         self.plan = plan
         self.lr = lr
@@ -99,6 +134,7 @@ class BatchedEngine:
         self.use_channel = use_channel
         self.use_ssop = use_ssop
         self.prox_mu = prox_mu
+        self.pad_cohorts = pad_cohorts
         self._round_fns: Dict = {}
 
     # -- compiled round function per split configuration -------------------
@@ -107,7 +143,7 @@ class BatchedEngine:
         if key in self._round_fns:
             return self._round_fns[key]
 
-        cfg, plan = self.cfg, self.plan
+        model, plan = self.model, self.plan
         lr, mu = self.lr, self.prox_mu
         with_ssop = self.use_channel and self.use_ssop
         chan_plan = plan if self.use_channel else None
@@ -116,7 +152,7 @@ class BatchedEngine:
             channel = Channel(ssop if with_ssop else None, chan_plan)
             batch = {"tokens": tok, "labels": lab, "weights": wt}
             return jax.value_and_grad(
-                lambda lp: weighted_split_loss(cfg, frozen, lp, batch,
+                lambda lp: weighted_split_loss(model, frozen, lp, batch,
                                                split, channel))(lora)
 
         def round_fn(frozen, lora_stack, ssop_stack, anchor,
@@ -146,6 +182,11 @@ class BatchedEngine:
         self._round_fns[key] = fn
         return fn
 
+    def compile_cache_sizes(self) -> Dict[Tuple[Split, bool], int]:
+        """Compiled-executable count per (split, prox) round function —
+        how many distinct cohort shapes each has specialized for."""
+        return {k: fn._cache_size() for k, fn in self._round_fns.items()}
+
     # -- public API --------------------------------------------------------
     def run_clients(self, theta, clients: Sequence[int],
                     splits: Dict[int, Split], channels: Dict[int, Channel],
@@ -157,6 +198,9 @@ class BatchedEngine:
         (tokens, labels) batches (its iterator order is preserved).
         Returns ``{client: (updated lora tree, mean local loss)}``; the
         loss arrays of all buckets are fetched in a single host sync.
+        Buckets are padded up to the next :data:`BUCKET_LADDER` size with
+        zero-weight phantom clients (exactly-zero loss and gradients),
+        so varying cohort sizes hit a bounded set of compiled shapes.
         """
         buckets: Dict[Split, List[int]] = {}
         for n in clients:
@@ -166,10 +210,19 @@ class BatchedEngine:
         for split, members in buckets.items():
             toks, labs, wts = stack_padded_batches(
                 [batches[n] for n in members], self.batch_size)
-            lora_stack = broadcast_tree(theta, len(members))
+            n_real = len(members)
+            size = bucket_size(n_real) if self.pad_cohorts else n_real
+            if size > n_real:
+                pad = size - n_real
+                toks = _pad_axis1(toks, pad)
+                labs = _pad_axis1(labs, pad)
+                wts = _pad_axis1(wts, pad)   # zero weights: inert rows
+            lora_stack = broadcast_tree(theta, size)
             ssop_stack = None
             if self.use_channel and self.use_ssop:
-                ssop_stack = stack_ssops([channels[n].ssop for n in members])
+                ssops = [channels[n].ssop for n in members]
+                ssops += [ssops[-1]] * (size - n_real)   # phantom rows
+                ssop_stack = stack_ssops(ssops)
             fn = self._round_fn(split, prox_anchor is not None)
             out_stack, losses = fn(self.frozen, lora_stack, ssop_stack,
                                    prox_anchor, jnp.asarray(toks),

@@ -1,10 +1,17 @@
 """End-to-end ELSA federation simulation (Alg. 1) plus FL baselines.
 
-Runs the *real* machinery end to end on a reduced BERT: behavioral
+Runs the *real* machinery end to end on a reduced model: behavioral
 fingerprinting on a public probe set, trust scoring, latency-aware spectral
 clustering, per-client dynamic splits, split training through the
 SS-OP∘sketch channel, edge FedAvg, and coherence/trust-weighted cloud
 fusion with the Eq. 16 stopping rule.
+
+The harness is model-agnostic: ``FedConfig.model`` names any architecture
+registered in :mod:`repro.models.split_api` (the paper's ``"bert-base"``
+encoder by default, or a dense causal LM such as ``"llama3-8b"``), and
+every phase — warmup, fingerprinting, split training, evaluation —
+dispatches through the :class:`~repro.models.split_api.SplitModel`
+protocol.
 
 Two execution backends share this harness (``Federation(...,
 backend=...)``):
@@ -18,19 +25,17 @@ backend=...)``):
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+import warnings
 from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_config
 from repro.core import aggregation as agg
 from repro.core import clustering as clus
 from repro.core import splitting as split_mod
-from repro.core.fingerprint import (divergence_matrix, fingerprint,
-                                    pooled_embedding)
+from repro.core.fingerprint import divergence_matrix, fingerprint
 from repro.core.sketch import make_plan
 from repro.core.split_training import Channel, Split, split_loss
 from repro.core.ssop import make_ssop
@@ -40,9 +45,8 @@ from repro.data.probe import make_probe_set
 from repro.data.synthetic import SyntheticTaskConfig, make_federation_data, make_test_set
 from repro.federation.engine import BatchedEngine, stack_trees
 from repro.federation.topology import make_topology
-from repro.models import bert as bert_mod
 from repro.models.params import init_tree
-from repro.models.zoo import classification_loss
+from repro.models.split_api import get_split_model
 from repro.optim import SGD, AdamW, FedProx, FedAMS, fedprox_gradient
 
 
@@ -70,7 +74,10 @@ class FedConfig:
     num_classes: int = 4
     use_channel: bool = True
     use_ssop: bool = True
-    bert_layers: int = 8                 # reduced-BERT depth (tests: 4)
+    model: str = "bert-base"             # split-model registry name
+    layers: Optional[int] = None         # reduced-model depth (tests: 4;
+                                         # None -> 8)
+    bert_layers: Optional[int] = None    # DEPRECATED: use ``layers=``
     seq_len: int = 24                    # synthetic-task sequence length
     class_sharpness: float = 4.0         # synthetic-task separability
     background_frac: float = 0.5         # synthetic-task noise fraction
@@ -79,6 +86,22 @@ class FedConfig:
                                          # (paper §IV.A heterogeneity setup)
     dtype: str = "float32"               # params+activations; parity tests
                                          # use float64 (needs jax x64 mode)
+
+    def __post_init__(self):
+        # warn only when the deprecated spelling actually carries intent:
+        # after resolution bert_layers mirrors layers, so reconstruction
+        # round-trips (dataclasses.replace / FedConfig(**asdict(...)))
+        # stay warning-free
+        if self.bert_layers is not None and self.layers != self.bert_layers:
+            warnings.warn(
+                "FedConfig.bert_layers is deprecated; use FedConfig.layers "
+                "(the federation is model-agnostic now)",
+                DeprecationWarning, stacklevel=3)
+            if self.layers is None:
+                self.layers = self.bert_layers
+        if self.layers is None:
+            self.layers = 8
+        self.bert_layers = self.layers   # keep legacy readers consistent
 
 
 class Federation:
@@ -97,9 +120,9 @@ class Federation:
             raise ValueError(f"unknown backend {backend!r}")
         self.backend = backend
         self.fed = fed
-        self.cfg = get_config("bert-base").reduced().with_(
-            num_layers=fed.bert_layers, param_dtype=fed.dtype,
-            activation_dtype=fed.dtype)
+        self.model = get_split_model(fed.model, num_layers=fed.layers,
+                                     dtype=fed.dtype)
+        self.cfg = self.model.cfg
         self.task = SyntheticTaskConfig(vocab_size=self.cfg.vocab_size,
                                         num_classes=fed.num_classes,
                                         seq_len=fed.seq_len,
@@ -112,7 +135,8 @@ class Federation:
                                   seed=fed.seed)
         self.data = make_federation_data(
             self.task, fed.n_clients, fed.total_examples, fed.alpha,
-            poisoned_clients=fed.poisoned, seed=fed.seed)
+            poisoned_clients=fed.poisoned, seed=fed.seed,
+            task_kind=self.model.task)
         self.test_tokens, self.test_labels = make_test_set(self.task, 512,
                                                            seed=fed.seed + 7)
         self.probe = make_probe_set(self.task, fed.probe_q, seed=fed.seed + 3)
@@ -123,7 +147,7 @@ class Federation:
             self.topo.capacity, self.topo.bandwidth, self.policy)
 
         key = jax.random.PRNGKey(fed.seed)
-        specs = bert_mod.bert_specs(self.cfg, fed.num_classes)
+        specs = self.model.specs(fed.num_classes)
         tree = init_tree(specs, key, jnp.dtype(fed.dtype))
         self.frozen, self.lora0 = tree["frozen"], tree["lora"]
 
@@ -142,7 +166,7 @@ class Federation:
         """Lazily-built compiled round executor (batched backend)."""
         if self._engine is None:
             self._engine = BatchedEngine(
-                self.cfg, self.frozen, self.plan, lr=self.fed.lr,
+                self.model, self.frozen, self.plan, lr=self.fed.lr,
                 batch_size=self.fed.batch_size,
                 use_channel=self.fed.use_channel,
                 use_ssop=self.fed.use_ssop)
@@ -182,9 +206,8 @@ class Federation:
         return self._channels[client]
 
     def _probe_embeddings(self, lora):
-        x, cls, _ = bert_mod.bert_forward(self.cfg, self.frozen, lora,
-                                          jnp.asarray(self.probe))
-        return cls
+        return self.model.probe_repr(self.frozen, lora,
+                                     jnp.asarray(self.probe))
 
     # ------------------------------------------------------------------
     def _grad_fn(self, client: int, split: Split):
@@ -195,8 +218,8 @@ class Federation:
                self.fed.use_ssop, self.fed.use_channel)
         if key not in self._loss_grad_cache:
             def loss(lora, batch, channel):
-                return split_loss(self.cfg, self.frozen, lora, batch, split,
-                                  channel)
+                return split_loss(self.model, self.frozen, lora, batch,
+                                  split, channel)
             self._loss_grad_cache[key] = jax.value_and_grad(loss)
         return self._loss_grad_cache[key]
 
@@ -256,19 +279,19 @@ class Federation:
         if self._eval_fn is None:
             # tokens stay an argument (not a closure) so XLA doesn't try
             # to constant-fold the embedding of the whole test set
-            self._eval_fn = jax.jit(lambda lp, toks: bert_mod.bert_forward(
-                self.cfg, self.frozen, lp, toks)[2])
+            self._eval_fn = jax.jit(lambda lp, toks: self.model.forward(
+                self.frozen, lp, toks)[1])
         logits = self._eval_fn(lora, jnp.asarray(self.test_tokens))
-        pred = np.asarray(jnp.argmax(logits, -1))
-        return float((pred == self.test_labels).mean())
+        return self.model.accuracy(logits, self.test_tokens,
+                                   self.test_labels)
 
     # ------------------------------------------------------------------
     def _batched_probe_embeddings(self, loras):
-        """Probe [CLS] embeddings for a list of lora trees: (N, Q, D)."""
+        """Probe embeddings for a list of lora trees: (N, Q, D)."""
         if self._probe_fn is None:
             self._probe_fn = jax.jit(jax.vmap(
-                lambda lp, toks: bert_mod.bert_forward(
-                    self.cfg, self.frozen, lp, toks)[1],
+                lambda lp, toks: self.model.probe_repr(
+                    self.frozen, lp, toks),
                 in_axes=(0, None)))
         return self._probe_fn(stack_trees(loras), jnp.asarray(self.probe))
 

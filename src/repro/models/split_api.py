@@ -1,0 +1,384 @@
+"""Model-agnostic split-federation API: the ``SplitModel`` protocol.
+
+ELSA's splitting, sketching, and aggregation (§III.B.2, Eqs. 7–9) are
+defined over an abstract M-block model: an embedding, a stack of blocks
+cut at ``(p, p+q)``, and a task head.  This module pins that contract
+down as a small frozen interface so every split-federation consumer —
+:mod:`repro.core.split_training`, the batched engine, the communication
+and wall-clock cost models, and the :class:`~repro.federation.simulation.
+Federation` harness — dispatches on the protocol instead of importing
+``repro.models.bert`` directly.
+
+The protocol (one adapter instance per :class:`~repro.configs.base.
+ArchConfig`, stateless and hashable-by-config):
+
+- ``specs(num_classes)`` / ``lora_specs(num_classes)`` — parameter Spec
+  trees (``{"frozen": ..., "lora": ...}``);
+- ``embed(frozen, tokens)`` — token ids -> block-stack activations;
+- ``run_blocks(frozen, lora, x, lo, hi)`` — run blocks ``[lo, hi)`` so
+  Part 1 / Part 2 / Part 3 of the tripartite split are literal slices;
+- ``head(frozen, lora, x)`` -> ``(repr, logits)`` — the task readout
+  plus the pooled representation used for behavioral fingerprints
+  (Eq. 4) and SS-OP basis construction;
+- ``per_example_loss(logits, batch)`` -> ``(B,)`` — per-example so the
+  engine's zero-weight padding rows cancel exactly;
+- ``accuracy(logits, tokens, labels)`` — host-side eval metric;
+- ``num_blocks`` / ``activation_shape`` / ``block_param_count`` /
+  ``head_param_count`` / ``flops_per_token`` — the shape and 6ND cost
+  facts the Eq. 22–24 communication model and the runtime cost model
+  derive their constants from.
+
+Adapters: :class:`BertSplitModel` (the paper's encoder, classification
+readout at [CLS]) and :class:`CausalLMSplitModel` (any dense decoder-only
+LM from the zoo — llama/qwen/olmo-style — with a next-token-CE task).
+``get_split_model(name)`` resolves registered architecture names;
+``split_model_for(cfg)`` adapts an existing ``ArchConfig`` by family.
+"""
+from __future__ import annotations
+
+from functools import lru_cache
+from typing import Callable, Dict, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import REGISTRY as ARCH_REGISTRY, get_config
+from repro.configs.base import ArchConfig
+from repro.models import bert as bert_mod
+from repro.models import transformer
+from repro.models.common import apply_norm
+from repro.models.params import is_spec
+from repro.models.zoo import per_example_ce
+
+
+def _spec_params(tree) -> float:
+    return float(sum(np.prod(s.shape) for s in
+                     jax.tree_util.tree_leaves(tree, is_leaf=is_spec)))
+
+
+# ---------------------------------------------------------------------------
+# the protocol
+# ---------------------------------------------------------------------------
+
+class SplitModel:
+    """Abstract M-block model the split-federation machinery runs on.
+
+    Subclasses adapt one architecture family; instances are stateless
+    wrappers around an :class:`ArchConfig` (parameters are always passed
+    in, never held), so one adapter can be closed over by jitted
+    functions and shared across a federation.
+    """
+
+    #: "classification" (labels readout) or "causal-lm" (next-token CE)
+    task: str = "classification"
+
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+
+    @property
+    def name(self) -> str:
+        return self.cfg.name
+
+    @property
+    def num_blocks(self) -> int:
+        """Number of splittable blocks (Eq. 7's M)."""
+        return self.cfg.num_layers
+
+    # -- parameters ---------------------------------------------------------
+    def specs(self, num_classes: int = 2):
+        """{"frozen": SpecTree, "lora": SpecTree} for this model."""
+        raise NotImplementedError
+
+    def lora_specs(self, num_classes: int = 2):
+        """The trainable (uplinked) LoRA subtree — what Eq. 22's
+        |θ_LoRA| term prices."""
+        return self.specs(num_classes)["lora"]
+
+    # -- split execution ----------------------------------------------------
+    def embed(self, frozen, tokens):
+        """Token ids (B, S) -> block-stack input activations."""
+        raise NotImplementedError
+
+    def run_blocks(self, frozen, lora, x, lo: int, hi: int,
+                   mask_valid=None):
+        """Run blocks [lo, hi) — the tripartite-split building block."""
+        raise NotImplementedError
+
+    def head(self, frozen, lora, x):
+        """Block-stack output -> (pooled repr (B, D), task logits)."""
+        raise NotImplementedError
+
+    def forward(self, frozen, lora, tokens, mask_valid=None):
+        """Full (unsplit) pass: embed -> all blocks -> head."""
+        x = self.embed(frozen, tokens)
+        x = self.run_blocks(frozen, lora, x, 0, self.num_blocks, mask_valid)
+        return self.head(frozen, lora, x)
+
+    def probe_repr(self, frozen, lora, tokens):
+        """Pooled embedding of public probes (fingerprints, SS-OP)."""
+        return self.forward(frozen, lora, tokens)[0]
+
+    # -- task ---------------------------------------------------------------
+    def per_example_loss(self, logits, batch):
+        """(B,) per-example loss; weighted-mean'd by the batched engine."""
+        raise NotImplementedError
+
+    def accuracy(self, logits, tokens, labels) -> float:
+        """Host-side eval metric on a test batch."""
+        raise NotImplementedError
+
+    # -- shape / cost facts -------------------------------------------------
+    def activation_shape(self, batch: int, seq: int):
+        """Shape of an activation crossing a split boundary (pre-sketch);
+        the last dim is Eq. 22's D^hidden."""
+        return (batch, seq, self.cfg.d_model)
+
+    def block_param_count(self, num_classes: int = 2) -> float:
+        """Per-block parameter count (frozen + LoRA), for 6ND FLOPs."""
+        specs = self.specs(num_classes)
+        total = _spec_params(specs["frozen"]["blocks"])
+        lora_blocks = specs["lora"].get("blocks")
+        if lora_blocks is not None:
+            total += _spec_params(lora_blocks)
+        return total / self.num_blocks
+
+    def head_param_count(self, num_classes: int = 2) -> float:
+        """Client-side readout parameters outside the block stack."""
+        raise NotImplementedError
+
+    def flops_per_token(self, split=None, num_classes: int = 2) -> float:
+        """6ND training FLOPs per token.
+
+        ``split=None`` counts the full model; a tripartite
+        :class:`~repro.core.split_training.Split` counts only the
+        client-side parts (Part 1's ``p`` + Part 3's ``o`` blocks plus
+        the head) — what the device itself executes and is billed for.
+        """
+        blk = self.block_param_count(num_classes)
+        head = self.head_param_count(num_classes)
+        n_blocks = (self.num_blocks if split is None
+                    else split.p + split.o)
+        return 6.0 * (n_blocks * blk + head)
+
+
+# ---------------------------------------------------------------------------
+# adapters
+# ---------------------------------------------------------------------------
+
+class BertSplitModel(SplitModel):
+    """The paper's own model (§IV.A): post-LN encoder, [CLS] pooler +
+    classification head (both trainable alongside the LoRA adapters)."""
+
+    task = "classification"
+
+    def specs(self, num_classes: int = 2):
+        return bert_mod.bert_specs(self.cfg, num_classes)
+
+    def embed(self, frozen, tokens):
+        return bert_mod.embed(self.cfg, frozen, tokens)
+
+    def run_blocks(self, frozen, lora, x, lo: int, hi: int,
+                   mask_valid=None):
+        return bert_mod.run_blocks(self.cfg, frozen, lora, x, lo, hi,
+                                   mask_valid)
+
+    def head(self, frozen, lora, x):
+        cls = x[:, 0, :]
+        pooled = jnp.tanh(cls @ lora["pooler"]["w"].astype(cls.dtype)
+                          + lora["pooler"]["b"].astype(cls.dtype))
+        logits = pooled @ lora["head"]["w"].astype(cls.dtype) \
+            + lora["head"]["b"].astype(cls.dtype)
+        return cls, logits
+
+    def per_example_loss(self, logits, batch):
+        return per_example_ce(logits, batch["labels"])
+
+    def accuracy(self, logits, tokens, labels) -> float:
+        pred = np.asarray(jnp.argmax(logits, -1))
+        return float((pred == np.asarray(labels)).mean())
+
+    def head_param_count(self, num_classes: int = 2) -> float:
+        lora = self.lora_specs(num_classes)
+        return _spec_params(lora["pooler"]) + _spec_params(lora["head"])
+
+
+class CausalLMSplitModel(SplitModel):
+    """Dense decoder-only causal LM (llama/qwen/olmo-style zoo configs).
+
+    The task head is the (frozen) vocab projection; the per-example loss
+    is mean next-token CE with padded-vocab masking, and the pooled
+    representation for fingerprints is the mean final hidden state.
+    MoE / prefix-structured decoders are rejected: their layer stacks are
+    not uniform block slices, so Eq. 7's p/q/o arithmetic doesn't apply
+    as-is (a future adapter can map them).
+    """
+
+    task = "causal-lm"
+
+    def __init__(self, cfg: ArchConfig):
+        if cfg.family != "dense" or cfg.moe is not None:
+            raise ValueError(
+                f"CausalLMSplitModel needs a dense non-MoE decoder config; "
+                f"got family={cfg.family!r} moe={cfg.moe is not None}")
+        super().__init__(cfg)
+
+    def specs(self, num_classes: int = 2):
+        del num_classes   # LM head is the vocab projection, not a classifier
+        return transformer.lm_specs(self.cfg)
+
+    def embed(self, frozen, tokens):
+        return jnp.take(frozen["embed"], tokens,
+                        axis=0).astype(self.cfg.adtype())
+
+    def run_blocks(self, frozen, lora, x, lo: int, hi: int,
+                   mask_valid=None):
+        x = transformer.run_block_range(self.cfg, frozen, lora, x, lo, hi)
+        if mask_valid is not None:
+            x = x * mask_valid[..., None].astype(x.dtype)
+        return x
+
+    def head(self, frozen, lora, x):
+        x = apply_norm(self.cfg.norm, frozen["final_norm"], x)
+        head = frozen.get("head", None)
+        logits = (x @ frozen["embed"].T.astype(x.dtype) if head is None
+                  else x @ head.astype(x.dtype))
+        return x.mean(axis=1), logits
+
+    def per_example_loss(self, logits, batch):
+        tokens = batch["tokens"]
+        lg = logits[:, :-1, :].astype(
+            jnp.promote_types(logits.dtype, jnp.float32))
+        vp, V = lg.shape[-1], self.cfg.vocab_size
+        if vp > V:
+            lg = lg + jnp.where(jnp.arange(vp) < V, 0.0,
+                                -1e30).astype(lg.dtype)
+        targets = tokens[:, 1:]
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(lg, targets[..., None], axis=-1)[..., 0]
+        return jnp.mean(lse - gold, axis=-1)
+
+    def accuracy(self, logits, tokens, labels) -> float:
+        del labels                       # next-token top-1, not class labels
+        # argmax on device: transfer (B, S) ints, not (B, S, vocab) floats
+        pred = np.asarray(
+            jnp.argmax(logits[:, :-1, :self.cfg.vocab_size], -1))
+        targets = np.asarray(tokens)[:, 1:]
+        return float((pred == targets).mean())
+
+    def head_param_count(self, num_classes: int = 2) -> float:
+        frozen = self.specs()["frozen"]
+        total = _spec_params(frozen["final_norm"])
+        if "head" in frozen:
+            total += _spec_params(frozen["head"])
+        else:                            # tied embeddings: output reuses embed
+            total += float(np.prod(frozen["embed"].shape))
+        return total
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+#: family -> adapter class, consulted by :func:`split_model_for`.
+#: Extend with :func:`register_family_adapter` to make a new family
+#: split-federable wherever an ``ArchConfig`` is adapted directly
+#: (cost/communication models, back-compat shims).
+FAMILY_ADAPTERS: Dict[str, Callable[[ArchConfig], "SplitModel"]] = {}
+
+
+def register_family_adapter(family: str,
+                            adapter: Callable[[ArchConfig], "SplitModel"]
+                            ) -> None:
+    FAMILY_ADAPTERS[family] = adapter
+
+
+def _adapter_for(cfg: ArchConfig):
+    adapter = FAMILY_ADAPTERS.get(cfg.family)
+    if adapter is None:
+        raise NotImplementedError(
+            f"no SplitModel adapter for arch {cfg.name!r} (family "
+            f"{cfg.family!r}); subclass SplitModel and add it with "
+            f"register_family_adapter({cfg.family!r}, <adapter>) — see "
+            f"docs/models.md")
+    return adapter
+
+
+def _dense_adapter(cfg: ArchConfig) -> "SplitModel":
+    # CausalLMSplitModel itself rejects MoE/prefix configs with a
+    # targeted error; reaching it is the right failure mode
+    return CausalLMSplitModel(cfg)
+
+
+register_family_adapter("encoder", BertSplitModel)
+register_family_adapter("dense", _dense_adapter)
+
+
+@lru_cache(maxsize=None)
+def split_model_for(cfg: ArchConfig) -> SplitModel:
+    """Adapt an existing ``ArchConfig`` (cached per config)."""
+    return _adapter_for(cfg)(cfg)
+
+
+def as_split_model(obj: Union[SplitModel, ArchConfig]) -> SplitModel:
+    """SplitModel passthrough / ArchConfig adaptation (back-compat shim
+    for callers that still pass a config where a model is expected)."""
+    return obj if isinstance(obj, SplitModel) else split_model_for(obj)
+
+
+#: name -> arch id in repro.configs.REGISTRY, or a factory
+#: (num_layers=None, dtype=None, **overrides) -> SplitModel
+_REGISTRY: Dict[str, Union[str, Callable[..., SplitModel]]] = {}
+
+
+def register_split_model(name: str,
+                         target: Union[str, Callable[..., SplitModel],
+                                       None] = None) -> None:
+    """Register ``name`` for :func:`get_split_model`.
+
+    ``target`` is an arch id from ``repro.configs.REGISTRY`` (defaults
+    to ``name``) or a callable ``(num_layers=None, dtype=None,
+    **overrides) -> SplitModel`` for custom adapters.
+    """
+    _REGISTRY[name] = target if target is not None else name
+
+
+def available_split_models():
+    return sorted(_REGISTRY)
+
+
+def get_split_model(name: str, *, num_layers: Optional[int] = None,
+                    dtype: Optional[str] = None, reduced: bool = True,
+                    **overrides) -> SplitModel:
+    """Resolve a registered architecture name to a ``SplitModel``.
+
+    By default the arch config is ``reduced()`` (the federation runs
+    CPU-sized models) and then overridden with ``num_layers`` / ``dtype``
+    / any ``ArchConfig.with_`` keyword.
+    """
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown split model {name!r}; registered: "
+                       f"{available_split_models()}")
+    target = _REGISTRY[name]
+    if callable(target):
+        return target(num_layers=num_layers, dtype=dtype, **overrides)
+    cfg = get_config(target)
+    if reduced:
+        cfg = cfg.reduced()
+    kw = dict(overrides)
+    if num_layers is not None:
+        kw["num_layers"] = num_layers
+    if dtype is not None:
+        kw.setdefault("param_dtype", dtype)
+        kw.setdefault("activation_dtype", dtype)
+    if kw:
+        cfg = cfg.with_(**kw)
+    return split_model_for(cfg)
+
+
+# every zoo config with a family adapter is split-federable out of the box
+for _arch, _cfg in ARCH_REGISTRY.items():
+    if _cfg.family == "encoder" or (_cfg.family == "dense"
+                                    and _cfg.moe is None):
+        register_split_model(_arch)
+del _arch, _cfg

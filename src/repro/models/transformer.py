@@ -93,6 +93,31 @@ def _block_apply(cfg, p, lp, x, *, positions, cache=None, window=0,
     return x + f, new_cache, aux
 
 
+def run_block_range(cfg, frozen, lora, x, lo: int, hi: int, *,
+                    positions=None, window=0, chunk=2048, remat=False):
+    """Scan decoder blocks ``[lo, hi)`` of the stacked (non-prefix,
+    non-MoE) layer block — the causal-LM split-learning building block
+    shared by :class:`repro.models.split_api.CausalLMSplitModel` and
+    usable standalone.  Returns the transformed activations."""
+    if lo == hi:
+        return x
+    if positions is None:
+        positions = jnp.arange(x.shape[1])
+
+    def body(xc, pl):
+        p, lp = pl
+        y, _, _ = _block_apply(cfg, p, lp, xc, positions=positions,
+                               window=window, chunk=chunk, use_moe=False)
+        return y, None
+
+    if remat:
+        body = jax.checkpoint(body)
+    sl = jax.tree_util.tree_map(lambda a: a[lo:hi], frozen["blocks"])
+    ll = (jax.tree_util.tree_map(lambda a: a[lo:hi], lora["blocks"])
+          if lora else None)
+    return jax.lax.scan(body, x, (sl, ll))[0]
+
+
 def lm_forward(cfg, params, lora, tokens, *, window=0, chunk=2048,
                remat=True, boundaries=None, channel=None):
     """tokens: (B, S) -> logits (B, S, padded_vocab), aux loss.

@@ -4,15 +4,25 @@ Compute time follows the roofline module's 6·N·D training convention
 (:mod:`repro.analysis.roofline`): a local step costs ``6 × N_client ×
 tokens`` FLOPs, where ``N_client`` counts only the parameters the client
 actually executes under its tripartite :class:`~repro.core.split_training.
-Split` — Part 1 (``p`` blocks) + Part 3 (``o`` blocks + pooler/head); the
-edge runs the ``q`` middle blocks on server-class capacity.  Divided by
+Split` — Part 1 (``p`` blocks) + Part 3 (``o`` blocks + the task head);
+the edge runs the ``q`` middle blocks on server-class capacity.  The
+per-block and head parameter counts come from the model's
+:class:`~repro.models.split_api.SplitModel` adapter
+(``block_param_count`` / ``head_param_count``), so any registered
+architecture is priced from its real Spec shapes.  Divided by
 ``Topology.capacity[n]`` (FLOP/s) this yields compute seconds.
 
-Communication time prices the sketched boundary activations with the
-Eq. 22–24 model (:mod:`repro.core.comm_model`) fed by a ``CommConfig``
-derived from the *actual* model config and ``SketchPlan``
-(``comm_config_from``), plus the per-edge-round LoRA upload and the
-propagation latency of the client-edge link.
+Communication time prices, per local round:
+
+- the sketched boundary activations with the Eq. 22–24 model
+  (:mod:`repro.core.comm_model`) fed by a ``CommConfig`` derived from the
+  *actual* model config and ``SketchPlan`` (``comm_config_from``);
+- the per-edge-round LoRA upload (uplink);
+- the cloud→client model broadcast (downlink) at round start — the
+  fused LoRA the client must fetch before training; downlink bandwidth
+  is ``downlink_ratio ×`` the client's uplink (access links are
+  asymmetric; ratio 1.0 recovers a symmetric link);
+- the propagation latency of the client-edge link.
 """
 from __future__ import annotations
 
@@ -23,28 +33,24 @@ import numpy as np
 
 from repro.core.comm_model import CommConfig, client_comm_time
 from repro.core.split_training import Split
-from repro.models.bert import bert_specs
-from repro.models.params import is_spec
+from repro.models.split_api import split_model_for
 
 EDGE_FLOPS_DEFAULT = 5e12    # server-class edge accelerator (FLOP/s)
-
-
-def _spec_params(tree) -> float:
-    import jax.tree_util as jtu
-    return float(sum(np.prod(s.shape)
-                     for s in jtu.tree_leaves(tree, is_leaf=is_spec)))
+DOWNLINK_RATIO_DEFAULT = 4.0  # downlink/uplink bandwidth asymmetry
 
 
 @dataclasses.dataclass(frozen=True)
 class RoundCost:
     """Cost breakdown of one local round (seconds)."""
     compute_s: float
-    comm_s: float
+    comm_s: float          # uplink: boundary activations + LoRA upload
     latency_s: float
+    downlink_s: float = 0.0  # cloud->client model broadcast
 
     @property
     def total_s(self) -> float:
-        return self.compute_s + self.comm_s + self.latency_s
+        return self.compute_s + self.comm_s + self.latency_s \
+            + self.downlink_s
 
 
 class ClientCostModel:
@@ -58,22 +64,20 @@ class ClientCostModel:
     def __init__(self, cfg, topo, comm: CommConfig, *, batch_size: int,
                  num_classes: int = 2,
                  edge_flops: float = EDGE_FLOPS_DEFAULT,
+                 downlink_ratio: float = DOWNLINK_RATIO_DEFAULT,
                  jitter_sigma: float = 0.0, seed: int = 0):
         self.cfg = cfg
         self.topo = topo
         self.comm = comm
         self.batch_size = int(batch_size)
         self.edge_flops = float(edge_flops)
+        self.downlink_ratio = float(downlink_ratio)
         self.jitter_sigma = float(jitter_sigma)
         self._seed = seed
 
-        specs = bert_specs(cfg, num_classes)
-        n_layers = cfg.num_layers
-        self.block_params = (_spec_params(specs["frozen"]["blocks"])
-                             + _spec_params(specs["lora"]["blocks"])
-                             ) / n_layers
-        self.head_params = (_spec_params(specs["lora"]["pooler"])
-                            + _spec_params(specs["lora"]["head"]))
+        model = split_model_for(cfg)
+        self.block_params = model.block_param_count(num_classes)
+        self.head_params = model.head_param_count(num_classes)
 
     # -- FLOPs (6ND convention) -------------------------------------------
     def client_flops_per_step(self, split: Split) -> float:
@@ -109,12 +113,15 @@ class ClientCostModel:
         bw = float(self.topo.bandwidth[client])
         comm = client_comm_time(per_round, self.batch_size * steps, bw)
         comm += self.comm.lora_bytes / max(bw, 1e-9)
+        # cloud->client model broadcast before training starts
+        downlink = self.comm.lora_bytes / max(bw * self.downlink_ratio,
+                                              1e-9)
 
         k = edge if edge is not None and 0 <= edge < \
             self.topo.latency.shape[1] else int(
                 np.argmin(self.topo.latency[client]))
         lat = 2.0 * float(self.topo.latency[client, k]) / 1e3
-        return RoundCost(compute, comm, lat)
+        return RoundCost(compute, comm, lat, downlink)
 
     def estimate_population(self, splits: Dict[int, Split], steps: int,
                             edge_of: Optional[Dict[int, int]] = None

@@ -19,7 +19,8 @@ from typing import Dict, Optional
 
 from repro.core.comm_model import comm_config_from
 from repro.federation.topology import ChurnTrace, always_on
-from repro.runtime.cost import EDGE_FLOPS_DEFAULT, ClientCostModel
+from repro.runtime.cost import (DOWNLINK_RATIO_DEFAULT, EDGE_FLOPS_DEFAULT,
+                                ClientCostModel)
 from repro.runtime.trace import EventTrace
 
 POLICIES = ("sync", "deadline", "async")
@@ -49,6 +50,7 @@ class RuntimeConfig:
     # cost-model knobs
     edge_flops: float = EDGE_FLOPS_DEFAULT
     backhaul_bytes_per_s: float = 1.25e9    # edge<->cloud (10 Gbps)
+    downlink_ratio: float = DOWNLINK_RATIO_DEFAULT  # downlink/uplink bw
     jitter_sigma: float = 0.0               # lognormal compute jitter
     max_sim_s: float = float("inf")         # hard stop for the event loop
 
@@ -73,6 +75,7 @@ class EdgeRuntime:
             federation.cfg, federation.topo, self.comm,
             batch_size=fc.batch_size, num_classes=fc.num_classes,
             edge_flops=self.config.edge_flops,
+            downlink_ratio=self.config.downlink_ratio,
             jitter_sigma=self.config.jitter_sigma, seed=fc.seed)
         self.churn = self.config.churn or always_on(fc.n_clients)
         self.backhaul_s = self.comm.lora_bytes \

@@ -368,7 +368,14 @@ class AsyncScheduler(_SchedulerBase):
     since dispatch) and the client is re-dispatched from the fresh edge
     model; the cloud fuses all edge models every ``cloud_period_s``
     simulated seconds and broadcasts the result back to the edges.
-    ``global_rounds`` counts cloud fusions."""
+    ``global_rounds`` counts cloud fusions.
+
+    ``fedavg-random`` keeps its partial-participation semantics here
+    too: each cloud-fusion window samples half of every edge's members
+    as the active cohort — only cohort members are (re-)dispatched, and
+    the fusion's edge weights are computed over the *actually-sampled*
+    cohort, not the full membership (which would silently degrade the
+    baseline to full participation)."""
 
     def run(self, method: str, global_rounds: int, steps_per_round: int,
             eval_every: int, log: bool) -> Dict:
@@ -376,7 +383,6 @@ class AsyncScheduler(_SchedulerBase):
         use_split_dyn = method not in ("elsa-fixed",)
         rng, groups, div, trust, iters, server_opt, server_state = \
             self._setup(method)
-        del rng   # async has no per-round subsampling
         history = {"round": [], "time": [], "accuracy": [], "loss": [],
                    "delta": []}
         client_losses: Dict[int, List[float]] = {
@@ -395,6 +401,19 @@ class AsyncScheduler(_SchedulerBase):
         self._iters = iters
         self._anchor = theta
 
+        def sample_cohort():
+            """Per-fusion-window active set per edge (fedavg-random
+            subsamples half the members, like the sync/deadline loops
+            do per global round; other methods run everyone)."""
+            if method != "fedavg-random":
+                return {k: list(ms) for k, ms in groups.items()}
+            return {k: sorted(int(x) for x in
+                              rng.choice(ms, max(1, len(ms) // 2),
+                                         replace=False))
+                    for k, ms in groups.items()}
+
+        cohort = sample_cohort()
+
         period = self.rcfg.cloud_period_s
         if period is None:
             est = self.cost.estimate_population(
@@ -403,13 +422,13 @@ class AsyncScheduler(_SchedulerBase):
             period = fc.t_rounds * float(np.median(list(est.values()))) \
                 + self.rt.backhaul_s
 
-        # initial dispatch: every online member, batched per edge
-        for k, members in groups.items():
-            ready = [n for n in members if self.churn.is_online(n, 0.0)]
+        # initial dispatch: every online cohort member, batched per edge
+        for k in groups:
+            ready = [n for n in cohort[k] if self.churn.is_online(n, 0.0)]
             if ready:
                 self._dispatch(ready, k, 0.0, edge_theta[k], version[k],
                                states, queue)
-            for n in members:
+            for n in cohort[k]:
                 if n not in ready:
                     queue.push(Event(self.churn.next_online(n, 0.0),
                                      REJOIN, n, k))
@@ -435,7 +454,9 @@ class AsyncScheduler(_SchedulerBase):
                 client_losses[n].append(loss_n)
                 self.trace.log(t, ARRIVAL, n, k, staleness=s,
                                weight=round(w, 6))
-                if self.churn.is_online(n, t):
+                if n not in cohort[k]:
+                    pass   # dropped from the current cohort: stay idle
+                elif self.churn.is_online(n, t):
                     self._dispatch([n], k, t, edge_theta[k], version[k],
                                    states, queue)
                 else:
@@ -443,15 +464,19 @@ class AsyncScheduler(_SchedulerBase):
                                      REJOIN, n, k))
             elif ev.kind == REJOIN:
                 n, k = ev.client, ev.edge
-                if states[n].idle and self.churn.is_online(n, t):
+                if not (states[n].idle and n in cohort[k]):
+                    pass   # mid-flight, or no longer sampled this window
+                elif self.churn.is_online(n, t):
                     self._dispatch([n], k, t, edge_theta[k], version[k],
                                    states, queue)
-                elif states[n].idle:
+                else:
                     queue.push(Event(self.churn.next_online(n, t),
                                      REJOIN, n, k))
             elif ev.kind == CLOUD_AGG:
                 fusions += 1
-                alphas = {k: self._edge_alpha(div, trust, groups[k])
+                # weight every edge by the cohort that actually trained
+                # this window (== full membership except fedavg-random)
+                alphas = {k: self._edge_alpha(div, trust, cohort[k])
                           for k in groups}
                 theta, server_state, delta = self._cloud_fuse(
                     method, edge_theta, alphas, theta, server_opt,
@@ -473,6 +498,18 @@ class AsyncScheduler(_SchedulerBase):
                 if delta <= fc.xi:
                     break
                 if fusions < global_rounds:
+                    cohort = sample_cohort()   # next window's active set
+                    for k in groups:           # wake newly-sampled idlers
+                        ready = [n for n in cohort[k] if states[n].idle
+                                 and self.churn.is_online(n, t)]
+                        if ready:
+                            self._dispatch(ready, k, t, edge_theta[k],
+                                           version[k], states, queue)
+                        for n in cohort[k]:
+                            if states[n].idle and n not in ready:
+                                queue.push(Event(
+                                    self.churn.next_online(n, t),
+                                    REJOIN, n, k))
                     queue.push(Event(t + period, CLOUD_AGG))
         return self._finish_history(history, theta, client_losses)
 

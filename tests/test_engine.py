@@ -25,7 +25,7 @@ from repro.core.sketch import (SketchPlan, channel, compress, decompress,
 # a 14-example dataset so every one of its batches is a ragged, padded one
 PARITY_KW = dict(n_clients=6, n_edges=2, alpha=0.2, poisoned=(4,),
                  total_examples=300, probe_q=8, local_warmup_steps=2,
-                 lr=1e-4, bert_layers=4, t_rounds=1, batch_size=16,
+                 lr=1e-4, layers=4, t_rounds=1, batch_size=16,
                  dtype="float64", seed=0)
 
 

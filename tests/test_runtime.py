@@ -17,7 +17,7 @@ from repro.runtime.events import Event, EventQueue
 
 SMALL_KW = dict(n_clients=6, n_edges=2, alpha=0.2, poisoned=(4,),
                 total_examples=600, probe_q=8, local_warmup_steps=2,
-                lr=2e-2, bert_layers=4, t_rounds=1, batch_size=16, seed=0)
+                lr=2e-2, layers=4, t_rounds=1, batch_size=16, seed=0)
 
 
 # ---------------------------------------------------------------------------
@@ -78,6 +78,48 @@ def test_cost_model_monotone_in_capacity_and_split():
     deep = cm.round_cost(0, Split(3, 3, 2), 4).total_s
     assert deep > shallow
     assert cm.round_cost(0, Split(2, 4, 2), 4).comm_s > 0
+
+
+def test_cost_model_prices_downlink_broadcast():
+    """The cloud->client model broadcast is priced alongside uplink and
+    is monotone in lora size / downlink bandwidth."""
+    import dataclasses
+
+    from repro.core.comm_model import comm_config_from
+    from repro.runtime.cost import ClientCostModel
+    from repro.configs import get_config
+
+    cfg = get_config("bert-base").reduced().with_(
+        num_layers=8, param_dtype="float32", activation_dtype="float32")
+    topo = make_topology(4, 2, seed=0)
+    topo.bandwidth[:] = 1e7
+    fed = FedConfig(n_clients=4, n_edges=2)
+    comm = comm_config_from(cfg, fed)
+    cm = ClientCostModel(cfg, topo, comm, batch_size=16, num_classes=4)
+    rc = cm.round_cost(0, Split(2, 4, 2), 4)
+    assert rc.downlink_s > 0
+    assert rc.total_s == pytest.approx(rc.compute_s + rc.comm_s
+                                       + rc.latency_s + rc.downlink_s)
+    # broadcast bytes: doubling the model doubles the downlink time
+    comm2 = dataclasses.replace(comm, lora_bytes=2 * comm.lora_bytes)
+    cm2 = ClientCostModel(cfg, topo, comm2, batch_size=16, num_classes=4)
+    assert cm2.round_cost(0, Split(2, 4, 2), 4).downlink_s \
+        == pytest.approx(2 * rc.downlink_s)
+    # faster downlink (higher asymmetry ratio) -> strictly less time
+    prev = None
+    for ratio in (1.0, 2.0, 4.0, 8.0):
+        cmr = ClientCostModel(cfg, topo, comm, batch_size=16,
+                              num_classes=4, downlink_ratio=ratio)
+        t = cmr.round_cost(0, Split(2, 4, 2), 4)
+        if prev is not None:
+            assert t.downlink_s < prev.downlink_s
+            assert t.total_s < prev.total_s
+        prev = t
+    # symmetric link: downlink == LoRA upload share of the uplink
+    sym = ClientCostModel(cfg, topo, comm, batch_size=16, num_classes=4,
+                          downlink_ratio=1.0)
+    assert sym.round_cost(0, Split(2, 4, 2), 4).downlink_s \
+        == pytest.approx(comm.lora_bytes / 1e7)
 
 
 def test_constrained_frac_reaches_topology_through_fedconfig():
@@ -159,3 +201,38 @@ def test_deadline_and_async_structure_under_churn():
         info = dict(rec[4])
         assert info["staleness"] >= 0 and 0 < info["weight"] <= 1
     assert np.isfinite(h_a["final_accuracy"])
+
+
+def test_async_fedavg_random_subsamples_cohort():
+    """fedavg-random under the async policy samples half the membership
+    per cloud-fusion window (it used to silently run full
+    participation) and only the sampled cohort is dispatched."""
+    fed = Federation(FedConfig(**SMALL_KW))
+    # homogeneous devices + an explicit cloud period comfortably above
+    # the round time, so every window folds its cohort's arrivals (the
+    # auto-derived median period would race the cohort by construction)
+    fed.topo.capacity[:] = 1e10
+    fed.topo.bandwidth[:] = 1e7
+    h = fed.run("fedavg-random", global_rounds=2, steps_per_round=2,
+                runtime=RuntimeConfig(policy="async", cloud_period_s=10.0))
+    tr = h["trace"]
+    agg_times = [r[0] for r in tr.of_kind("cloud_agg")]
+    assert len(agg_times) == 2
+    n, half = SMALL_KW["n_clients"], max(1, SMALL_KW["n_clients"] // 2)
+    windows = [(0.0, agg_times[0]), (agg_times[0], agg_times[1])]
+    for lo, hi in windows:
+        dispatched = {r[2] for r in tr.of_kind("dispatch")
+                      if lo <= r[0] < hi}
+        assert len(dispatched) == half < n, (lo, hi, dispatched)
+    assert np.isfinite(h["final_accuracy"])
+
+
+def test_async_full_methods_still_dispatch_everyone():
+    """Non-subsampling methods keep full participation under async."""
+    fed = Federation(FedConfig(**SMALL_KW))
+    h = fed.run("fedavg", global_rounds=1, steps_per_round=2,
+                runtime=RuntimeConfig(policy="async"))
+    tr = h["trace"]
+    first_agg = tr.of_kind("cloud_agg")[0][0]
+    dispatched = {r[2] for r in tr.of_kind("dispatch") if r[0] < first_agg}
+    assert dispatched == set(range(SMALL_KW["n_clients"]))

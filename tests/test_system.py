@@ -12,7 +12,7 @@ def federation():
     return Federation(FedConfig(
         n_clients=6, n_edges=2, alpha=0.2, poisoned=(4,),
         total_examples=900, probe_q=12, local_warmup_steps=3,
-        lr=2e-2, bert_layers=4, t_rounds=1, batch_size=16))
+        lr=2e-2, layers=4, t_rounds=1, batch_size=16))
 
 
 def test_elsa_full_pipeline_runs_and_learns(federation):
@@ -46,6 +46,6 @@ def test_convergence_criterion_stops_early():
     fed = Federation(FedConfig(
         n_clients=4, n_edges=2, alpha=0.5, poisoned=(),
         total_examples=400, probe_q=8, local_warmup_steps=2,
-        lr=1e-6, xi=1e3, bert_layers=4))   # huge xi -> stop after round 0
+        lr=1e-6, xi=1e3, layers=4))   # huge xi -> stop after round 0
     h = fed.run("fedavg", global_rounds=6, steps_per_round=2)
     assert len(h["round"]) <= 2
