@@ -17,46 +17,40 @@ Writes ``BENCH_fed_round.json`` at the repo root via
 ``benchmarks.common.write_json`` and prints the usual CSV line.
 """
 import os
-import time
 
-from benchmarks.common import emit, write_json
+from benchmarks.common import (emit, fed_round_config, time_fed_round,
+                               write_json)
 from repro.federation.simulation import FedConfig, Federation
 
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
                         "BENCH_fed_round.json")
 
 
-def _config(clients=20, model="bert-base"):
-    return dict(n_clients=clients, n_edges=4, alpha=0.1,
-                poisoned=(3, 8, 12, 17), total_examples=2000, probe_q=16,
-                local_warmup_steps=2, layers=4, lr=5e-3, t_rounds=1,
-                batch_size=16, model=model)
-
-
-def _time_round(backend: str, steps: int, clients: int,
-                model: str) -> float:
-    fed = Federation(FedConfig(**_config(clients, model)), backend=backend)
-    fed.run("fedavg", global_rounds=1, steps_per_round=steps)   # warmup
-    t0 = time.perf_counter()
-    fed.run("fedavg", global_rounds=1, steps_per_round=steps)
-    return time.perf_counter() - t0
+def _time_round(backend: str, steps: int, cfg_kw: dict) -> float:
+    return time_fed_round(
+        lambda: Federation(FedConfig(**cfg_kw), backend=backend), steps)
 
 
 def run(steps: int = 4, clients: int = 20, model: str = "bert-base",
-        write: bool = True):
-    t_batched = _time_round("batched", steps, clients, model)
-    t_reference = _time_round("reference", steps, clients, model)
+        write: bool = True, out: str = None):
+    cfg_kw = fed_round_config(clients, model, total_examples=2000)
+    t_batched = _time_round("batched", steps, cfg_kw)
+    t_reference = _time_round("reference", steps, cfg_kw)
     speedup = t_reference / t_batched
     payload = {
+        # labels come from the shared config so the record can't drift
+        # from the measured workload
         "config": {"clients": clients, "steps_per_round": steps,
-                   "model": model, "layers": 4, "t_rounds": 1,
-                   "batch_size": 16, "method": "fedavg", "device": "cpu"},
+                   "model": model, "layers": cfg_kw["layers"],
+                   "t_rounds": cfg_kw["t_rounds"],
+                   "batch_size": cfg_kw["batch_size"],
+                   "method": "fedavg", "device": "cpu"},
         "reference_s": round(t_reference, 3),
         "batched_s": round(t_batched, 3),
         "speedup": round(speedup, 2),
     }
     if write:
-        write_json(os.path.abspath(OUT_PATH), payload)
+        write_json(os.path.abspath(out or OUT_PATH), payload)
     emit("fed_round_reference", t_reference * 1e6,
          f"{model}:{clients}x{steps}steps")
     emit("fed_round_batched", t_batched * 1e6, f"speedup={speedup:.2f}x")
@@ -67,12 +61,17 @@ if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
-                    help="tiny CI smoke configuration (no BENCH json)")
+                    help="tiny CI smoke configuration (no BENCH json "
+                         "unless --out is given)")
     ap.add_argument("--model", default="bert-base",
                     help="registered split-model name (bert-base, "
                          "llama3-8b, ...)")
+    ap.add_argument("--out", default=None,
+                    help="write the bench JSON here (for the CI "
+                         "regression gate / artifacts)")
     args = ap.parse_args()
     if args.quick:
-        print(run(steps=2, clients=6, model=args.model, write=False))
+        print(run(steps=2, clients=6, model=args.model,
+                  write=args.out is not None, out=args.out))
     else:
-        print(run(model=args.model))
+        print(run(model=args.model, out=args.out))

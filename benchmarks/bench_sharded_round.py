@@ -1,0 +1,96 @@
+"""Sharded federation round: wall-clock vs device count, fixed population.
+
+Times one global ``fedavg`` round (all clients in one group, dynamic
+splits and the SS-OP∘sketch channel active, no profiling phase) for the
+batched engine unsharded and then sharded across meshes of 1, 2, 4, ...
+devices (``Federation(backend="batched", mesh=make_federation_mesh(d))``)
+at a *fixed* client population, so the curve isolates how the stacked
+client axis scales across devices.  Each configuration gets one warmup
+run (compiles, builds channels) before the timed run.
+
+Must see multiple devices to measure anything: the module forces
+``--xla_force_host_platform_device_count`` (default 8, override with
+``BENCH_HOST_DEVICES``) into ``XLA_FLAGS`` *before* the first jax
+import, so plain CPU hosts — laptops, CI runners — exercise the real
+multi-device partitioning path.  Note host devices share the machine's
+physical cores, so measured CPU "speedup" is bounded by core count, not
+device count; the curve is still the regression signal CI gates on
+(sharding must never make a round catastrophically slower).
+
+Writes ``BENCH_sharded_round.json`` at the repo root (or ``--out``).
+"""
+import os
+
+_FLAGS = os.environ.get("XLA_FLAGS", "")
+if "host_platform_device_count" not in _FLAGS:
+    os.environ["XLA_FLAGS"] = (_FLAGS + " --xla_force_host_platform_"
+                               "device_count="
+                               + os.environ.get("BENCH_HOST_DEVICES", "8"))
+
+import jax                                                    # noqa: E402
+
+from benchmarks.common import (emit, fed_round_config,        # noqa: E402
+                               time_fed_round, write_json)
+from repro.federation.simulation import FedConfig, Federation  # noqa: E402
+from repro.launch.mesh import make_federation_mesh            # noqa: E402
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_sharded_round.json")
+
+
+def _time_round(mesh, steps: int, cfg_kw: dict) -> float:
+    return time_fed_round(
+        lambda: Federation(FedConfig(**cfg_kw), backend="batched",
+                           mesh=mesh), steps)
+
+
+def run(steps: int = 4, clients: int = 64, model: str = "bert-base",
+        device_counts=None, write: bool = True, out: str = None):
+    n_avail = len(jax.devices())
+    if device_counts is None:
+        device_counts = [d for d in (1, 2, 4, 8, 16) if d <= n_avail]
+    # population is the swept variable here, so the dataset scales with
+    # it (50 examples/client) instead of bench_fed_round's fixed total
+    cfg_kw = fed_round_config(clients, model, total_examples=50 * clients)
+    t_unsharded = _time_round(None, steps, cfg_kw)
+    sharded, speedup = {}, {}
+    for d in device_counts:
+        t_d = _time_round(make_federation_mesh(d), steps, cfg_kw)
+        sharded[str(d)] = round(t_d, 3)
+        speedup[str(d)] = round(t_unsharded / t_d, 2)
+        emit("sharded_round", t_d * 1e6,
+             f"{model}:{clients}c/{d}dev speedup={speedup[str(d)]}x")
+    payload = {
+        # labels come from the shared config so the record can't drift
+        # from the measured workload
+        "config": {"clients": clients, "steps_per_round": steps,
+                   "model": model, "layers": cfg_kw["layers"],
+                   "t_rounds": cfg_kw["t_rounds"],
+                   "batch_size": cfg_kw["batch_size"], "method": "fedavg",
+                   "devices_available": n_avail, "device": "cpu"},
+        "unsharded_s": round(t_unsharded, 3),
+        "sharded_s": sharded,
+        "speedup_vs_unsharded": speedup,
+    }
+    if write:
+        write_json(os.path.abspath(out or OUT_PATH), payload)
+    return payload
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny CI smoke configuration")
+    ap.add_argument("--model", default="bert-base")
+    ap.add_argument("--out", default=None,
+                    help="write the bench JSON here (quick mode only "
+                         "writes when --out is given)")
+    args = ap.parse_args()
+    if args.quick:
+        n = len(jax.devices())
+        print(run(steps=2, clients=16, model=args.model,
+                  device_counts=sorted({1, n}), write=args.out is not None,
+                  out=args.out))
+    else:
+        print(run(model=args.model, out=args.out))

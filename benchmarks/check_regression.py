@@ -1,0 +1,90 @@
+"""Bench regression gate: fail CI when a fresh bench run regresses.
+
+Each gate reads one fresh ``BENCH_*.json`` (produced by a bench script's
+``--out``) and checks a scalar metric against a floor:
+
+- **absolute floors** hold on any runner (including quick-mode configs
+  on a 2-core CI box): the batched engine must still beat the sequential
+  reference, and sharding across host devices must never make a round
+  catastrophically slower than unsharded;
+- **committed-relative floors** (full mode only, ``--quick`` skips them
+  because quick configs are not comparable): the fresh metric must
+  retain a fraction of the committed record at the repo root.
+
+Exit code 1 on any violation, so the CI job fails.  Usage::
+
+    python benchmarks/check_regression.py --fresh DIR [--quick]
+"""
+import argparse
+import json
+import os
+import sys
+from typing import Callable, NamedTuple
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+class Gate(NamedTuple):
+    name: str
+    file: str
+    metric: Callable[[dict], float]
+    quick_floor: float      # absolute floor for --quick configs
+    full_floor: float       # absolute floor for full configs
+    committed_frac: float   # fresh >= frac * committed (full mode only)
+    desc: str
+
+
+GATES = (
+    Gate("fed_round_speedup", "BENCH_fed_round.json",
+         lambda p: p["speedup"],
+         quick_floor=1.2, full_floor=3.0, committed_frac=0.6,
+         desc="batched engine speedup over the sequential reference"),
+    Gate("sharded_round_worst_speedup", "BENCH_sharded_round.json",
+         lambda p: min(p["speedup_vs_unsharded"].values()),
+         quick_floor=0.25, full_floor=0.35, committed_frac=0.5,
+         desc="worst sharded-vs-unsharded round-time ratio across "
+              "device counts (sharding must not cripple a round; CPU "
+              "host devices share physical cores, so > 1x is not "
+              "required)"),
+)
+
+
+def check(fresh_dir: str, quick: bool) -> int:
+    failures = 0
+    for g in GATES:
+        fresh_path = os.path.join(fresh_dir, g.file)
+        if not os.path.exists(fresh_path):
+            print(f"FAIL {g.name}: fresh record {fresh_path} missing "
+                  "(did the bench step run with --out?)")
+            failures += 1
+            continue
+        with open(fresh_path) as f:
+            value = g.metric(json.load(f))
+        floor = g.quick_floor if quick else g.full_floor
+        committed_path = os.path.join(ROOT, g.file)
+        if not quick and os.path.exists(committed_path):
+            with open(committed_path) as f:
+                committed = g.metric(json.load(f))
+            floor = max(floor, g.committed_frac * committed)
+        ok = value >= floor
+        print(f"{'ok  ' if ok else 'FAIL'} {g.name}: {value:.2f} "
+              f"(floor {floor:.2f}{', quick' if quick else ''}) — "
+              f"{g.desc}")
+        failures += 0 if ok else 1
+    return failures
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh", required=True,
+                    help="directory holding freshly-produced BENCH_*.json")
+    ap.add_argument("--quick", action="store_true",
+                    help="fresh records come from --quick bench configs: "
+                         "use the relaxed absolute floors and skip "
+                         "committed-relative checks")
+    args = ap.parse_args()
+    n = check(args.fresh, args.quick)
+    if n:
+        print(f"{n} bench regression gate(s) failed")
+        sys.exit(1)
+    print("all bench regression gates passed")

@@ -13,6 +13,27 @@ def timeit(fn, *args, repeats=3, warmup=1, **kw):
     return out, dt * 1e6  # us
 
 
+def fed_round_config(clients: int, model: str, total_examples: int) -> dict:
+    """The fed-round benchmark FedConfig kwargs (ISSUE acceptance shape:
+    reduced 4-layer model, one edge round, no profiling-phase method),
+    shared by bench_fed_round and bench_sharded_round so the two
+    records always measure the same workload per client."""
+    return dict(n_clients=clients, n_edges=4, alpha=0.1,
+                poisoned=(3, 8, 12, 17), total_examples=total_examples,
+                probe_q=16, local_warmup_steps=2, layers=4, lr=5e-3,
+                t_rounds=1, batch_size=16, model=model)
+
+
+def time_fed_round(make_federation, steps: int) -> float:
+    """One warmup ``fedavg`` global round (compiles round functions,
+    builds per-client channels), then the timed round."""
+    fed = make_federation()
+    fed.run("fedavg", global_rounds=1, steps_per_round=steps)
+    t0 = time.perf_counter()
+    fed.run("fedavg", global_rounds=1, steps_per_round=steps)
+    return time.perf_counter() - t0
+
+
 def emit(name: str, us_per_call: float, derived):
     print(f"{name},{us_per_call:.1f},{derived}")
 

@@ -31,6 +31,19 @@ of recompiling for every distinct cohort size.  The FedProx anchor term
 vectorizes by broadcasting the shared anchor tree against the
 client-stacked parameters (:func:`repro.optim.fedprox_gradient`).
 
+Passing ``mesh=`` (see :func:`repro.launch.mesh.make_federation_mesh`)
+shards the stacked client axis across the mesh's ``("clients",)`` (or
+``("pod", "clients")``) axes via :class:`jax.sharding.NamedSharding`:
+the LoRA stacks, SS-OP stacks, and ``(steps, N, ...)`` batch stacks are
+placed with their client dimension split across devices while the
+frozen split-model parameters (and the FedProx anchor) stay replicated.
+Because per-client computation is independent along the vmapped axis,
+the round partitions without any cross-device collectives; cohorts pad
+to bucket sizes divisible by the mesh's client-axis extent so the shard
+split is even.  Sharding only changes array placement — the compiled
+math, the compile count (one per (split, ladder size)), and the
+single-device history are unchanged.
+
 The engine is model-agnostic: it dispatches on the
 :class:`~repro.models.split_api.SplitModel` protocol, so any registered
 architecture (BERT encoder, dense causal LMs, ...) runs through the same
@@ -38,16 +51,19 @@ compiled path.
 """
 from __future__ import annotations
 
+import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from repro.core.sketch import SketchPlan
 from repro.core.split_training import Channel, Split, weighted_split_loss
 from repro.core.ssop import SSOP
 from repro.data.pipeline import stack_padded_batches
+from repro.launch.mesh import client_axes
 from repro.models.split_api import as_split_model
 from repro.optim import fedprox_gradient
 
@@ -62,17 +78,45 @@ BUCKET_LADDER = (1, 2, 3, 4, 5, 6, 7, 8, 10, 12, 14, 16,
                  20, 24, 28, 32, 40, 48, 56, 64)
 
 
-def bucket_size(n: int) -> int:
-    """Smallest ladder size >= n (multiples of 16 beyond the ladder)."""
+def bucket_size(n: int, multiple: int = 1) -> int:
+    """Smallest ladder size >= n that is a multiple of ``multiple``
+    (the mesh's client-axis extent, so shards split evenly; multiples
+    of lcm(16, multiple) beyond the ladder)."""
     for s in BUCKET_LADDER:
-        if s >= n:
+        if s >= n and s % multiple == 0:
             return s
-    return -(-n // 16) * 16
+    step = math.lcm(16, multiple)
+    return -(-n // step) * step
+
+
+def placement_platform(mesh: Optional[Mesh] = None) -> str:
+    """Platform the engine's arrays actually live on: the mesh's devices
+    when sharding, the process default backend otherwise."""
+    if mesh is not None:
+        return mesh.devices.flat[0].platform
+    return jax.default_backend()
+
+
+def donate_buffers(platform: str) -> bool:
+    """Whether to donate the LoRA stacks on this placement — CPU XLA has
+    no donation support, so donating there only emits per-call
+    warnings."""
+    return platform != "cpu"
 
 
 # ---------------------------------------------------------------------------
 # stacked-pytree helpers
 # ---------------------------------------------------------------------------
+
+def is_client_map(theta) -> bool:
+    """True when ``theta`` is a {client-id: tree} map (integer keys —
+    Python or numpy ints, e.g. cohorts sampled via ``rng.choice``)
+    rather than a single LoRA pytree (whose dict nodes have string
+    keys)."""
+    return isinstance(theta, dict) and bool(theta) and \
+        all(isinstance(k, (int, np.integer)) and not isinstance(k, bool)
+            for k in theta)
+
 
 def stack_trees(trees: Sequence):
     """[tree, ...] -> one tree with a leading client axis on every leaf."""
@@ -124,7 +168,7 @@ class BatchedEngine:
     def __init__(self, model, frozen, plan: Optional[SketchPlan], *,
                  lr: float, batch_size: int, use_channel: bool,
                  use_ssop: bool, prox_mu: float = PROX_MU,
-                 pad_cohorts: bool = True):
+                 pad_cohorts: bool = True, mesh: Optional[Mesh] = None):
         self.model = as_split_model(model)
         self.cfg = self.model.cfg
         self.frozen = frozen
@@ -135,6 +179,32 @@ class BatchedEngine:
         self.use_ssop = use_ssop
         self.prox_mu = prox_mu
         self.pad_cohorts = pad_cohorts
+        self.mesh = mesh
+        self.platform = placement_platform(mesh)
+        self.donate = donate_buffers(self.platform)
+        self.n_shards = 1
+        if mesh is not None:
+            if "clients" not in mesh.shape:
+                # a pod-only match (e.g. the multi-pod production mesh)
+                # would silently replicate every stack across the other
+                # axes' devices, so require the real federation axis
+                raise ValueError(
+                    "federation mesh needs a 'clients' axis; got axes "
+                    f"{tuple(mesh.shape)} — build it with "
+                    "repro.launch.mesh.make_federation_mesh")
+            axes = client_axes(mesh)
+            for a in axes:
+                self.n_shards *= mesh.shape[a]
+            spec = axes[0] if len(axes) == 1 else axes
+            # leading client axis split across devices; step axis of the
+            # (steps, N, ...) batch stacks stays unsharded
+            self._shard_clients = NamedSharding(mesh, PartitionSpec(spec))
+            self._shard_batches = NamedSharding(mesh,
+                                                PartitionSpec(None, spec))
+            self._replicate = NamedSharding(mesh, PartitionSpec())
+            # frozen split-model params are read-only every round:
+            # replicate them once up front
+            self.frozen = jax.device_put(frozen, self._replicate)
         self._round_fns: Dict = {}
 
     # -- compiled round function per split configuration -------------------
@@ -175,10 +245,11 @@ class BatchedEngine:
                                          (tokens, labels, weights))
             return final, losses          # losses: (steps, N)
 
-        # donate the stacked LoRA buffers (in-place round update); CPU has
-        # no donation support, so skip there to avoid per-call warnings
-        donate = (1,) if jax.default_backend() != "cpu" else ()
-        fn = jax.jit(round_fn, donate_argnums=donate)
+        # donate the stacked LoRA buffers (in-place round update) when the
+        # arrays' actual placement supports it — gate on where the stacks
+        # live (mesh devices when sharding), not the process default
+        # backend, which can disagree with the placement
+        fn = jax.jit(round_fn, donate_argnums=(1,) if self.donate else ())
         self._round_fns[key] = fn
         return fn
 
@@ -191,9 +262,18 @@ class BatchedEngine:
     def run_clients(self, theta, clients: Sequence[int],
                     splits: Dict[int, Split], channels: Dict[int, Channel],
                     batches: Dict[int, List[Tuple[np.ndarray, np.ndarray]]],
-                    prox_anchor=None) -> Dict[int, Tuple[object, float]]:
+                    prox_anchor=None,
+                    per_client_theta: Optional[bool] = None
+                    ) -> Dict[int, Tuple[object, float]]:
         """Run one local round for every client, batched per split bucket.
 
+        ``theta`` is one shared LoRA tree broadcast to every client, or
+        a ``{client: tree}`` dict of per-client starting points (the
+        fused cross-group dispatch stacks clients that carry different
+        edge models into one round).  Callers that know which form they
+        pass should say so via ``per_client_theta``; the default sniffs
+        the dict's key types (:func:`is_client_map`), which is only safe
+        while no registered model's LoRA pytree is integer-keyed.
         ``batches[n]`` is the client's pre-drawn list of ``steps``
         (tokens, labels) batches (its iterator order is preserved).
         Returns ``{client: (updated lora tree, mean local loss)}``; the
@@ -201,32 +281,56 @@ class BatchedEngine:
         Buckets are padded up to the next :data:`BUCKET_LADDER` size with
         zero-weight phantom clients (exactly-zero loss and gradients),
         so varying cohort sizes hit a bounded set of compiled shapes.
+        With a mesh, bucket sizes are additionally multiples of the
+        client-axis extent and every client-stacked input is placed with
+        its leading axis sharded across the mesh.
         """
+        per_client = (is_client_map(theta) if per_client_theta is None
+                      else per_client_theta)
         buckets: Dict[Split, List[int]] = {}
         for n in clients:
             buckets.setdefault(splits[n], []).append(n)
+        if self.mesh is not None and prox_anchor is not None:
+            prox_anchor = jax.device_put(prox_anchor, self._replicate)
 
         pending = []
         for split, members in buckets.items():
             toks, labs, wts = stack_padded_batches(
                 [batches[n] for n in members], self.batch_size)
             n_real = len(members)
-            size = bucket_size(n_real) if self.pad_cohorts else n_real
+            size = (bucket_size(n_real, self.n_shards) if self.pad_cohorts
+                    else -(-n_real // self.n_shards) * self.n_shards)
             if size > n_real:
                 pad = size - n_real
                 toks = _pad_axis1(toks, pad)
                 labs = _pad_axis1(labs, pad)
                 wts = _pad_axis1(wts, pad)   # zero weights: inert rows
-            lora_stack = broadcast_tree(theta, size)
+            if per_client:
+                # per-client starting points; phantom rows repeat the
+                # last member (zero weights keep them inert)
+                trees = [theta[n] for n in members]
+                trees += [theta[members[-1]]] * (size - n_real)
+                lora_stack = stack_trees(trees)
+            else:
+                lora_stack = broadcast_tree(theta, size)
             ssop_stack = None
             if self.use_channel and self.use_ssop:
                 ssops = [channels[n].ssop for n in members]
                 ssops += [ssops[-1]] * (size - n_real)   # phantom rows
                 ssop_stack = stack_ssops(ssops)
+            if self.mesh is not None:
+                lora_stack = jax.device_put(lora_stack, self._shard_clients)
+                if ssop_stack is not None:
+                    ssop_stack = jax.device_put(ssop_stack,
+                                                self._shard_clients)
+                toks, labs, wts = jax.device_put(
+                    (toks, labs, wts), self._shard_batches)
+            else:
+                toks, labs, wts = (jnp.asarray(toks), jnp.asarray(labs),
+                                   jnp.asarray(wts))
             fn = self._round_fn(split, prox_anchor is not None)
             out_stack, losses = fn(self.frozen, lora_stack, ssop_stack,
-                                   prox_anchor, jnp.asarray(toks),
-                                   jnp.asarray(labs), jnp.asarray(wts))
+                                   prox_anchor, toks, labs, wts)
             pending.append((members, out_stack, losses))
 
         # one host sync for every bucket's (steps, N) loss array

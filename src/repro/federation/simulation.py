@@ -43,7 +43,8 @@ from repro.core.trust import trust_scores
 from repro.data.pipeline import infinite_batches
 from repro.data.probe import make_probe_set
 from repro.data.synthetic import SyntheticTaskConfig, make_federation_data, make_test_set
-from repro.federation.engine import BatchedEngine, stack_trees
+from repro.federation.engine import (BatchedEngine, is_client_map,
+                                     stack_trees)
 from repro.federation.topology import make_topology
 from repro.models.params import init_tree
 from repro.models.split_api import get_split_model
@@ -111,14 +112,20 @@ class Federation:
 
     ``backend="batched"`` runs local training through the compiled
     vmap/scan engine; ``backend="reference"`` keeps the sequential eager
-    path (parity baseline).
+    path (parity baseline).  ``mesh=`` (built with
+    :func:`repro.launch.mesh.make_federation_mesh`) shards the engine's
+    stacked client axis across a device mesh; the default ``None`` keeps
+    every round single-device.
     """
 
     def __init__(self, fed: FedConfig = FedConfig(),
-                 backend: str = "batched"):
+                 backend: str = "batched", mesh=None):
         if backend not in ("batched", "reference"):
             raise ValueError(f"unknown backend {backend!r}")
+        if mesh is not None and backend != "batched":
+            raise ValueError("mesh sharding requires backend='batched'")
         self.backend = backend
+        self.mesh = mesh
         self.fed = fed
         self.model = get_split_model(fed.model, num_layers=fed.layers,
                                      dtype=fed.dtype)
@@ -169,7 +176,7 @@ class Federation:
                 self.model, self.frozen, self.plan, lr=self.fed.lr,
                 batch_size=self.fed.batch_size,
                 use_channel=self.fed.use_channel,
-                use_ssop=self.fed.use_ssop)
+                use_ssop=self.fed.use_ssop, mesh=self.mesh)
         return self._engine
 
     def _default_split(self) -> Split:
@@ -248,15 +255,26 @@ class Federation:
         return lora, float(np.mean(losses))
 
     def group_steps(self, clients, theta, n_steps: int, iters,
-                    use_split=True, prox_anchor=None):
+                    use_split=True, prox_anchor=None, per_client=None):
         """Run one local round for a client group on the active backend.
 
+        ``theta`` is either one shared LoRA tree or — for the fused
+        cross-group dispatch of the sharded engine — a ``{client: tree}``
+        dict of per-client starting points (clients of different edge
+        groups carry their own edge model into one stacked round).
+        Callers that know which form they pass should say so via
+        ``per_client``; the default sniffs the dict's key types
+        (:func:`~repro.federation.engine.is_client_map`), which is only
+        safe while no registered model's LoRA pytree is integer-keyed.
         Returns ``{client: (lora, mean loss)}``.  The batched backend
         stacks the group per split bucket and runs the compiled
         vmap/scan round; the reference backend loops ``client_steps``.
         """
+        if per_client is None:
+            per_client = is_client_map(theta)
         if self.backend != "batched":
-            return {n: self.client_steps(n, theta, n_steps, iters[n],
+            return {n: self.client_steps(n, theta[n] if per_client
+                                         else theta, n_steps, iters[n],
                                          use_split=use_split,
                                          prox_anchor=prox_anchor)
                     for n in clients}
@@ -264,15 +282,24 @@ class Federation:
                       else self._default_split()) for n in clients}
         # all missing channels derive from the same theta -> one probe
         # forward shared across clients instead of N identical ones
+        # (per-client thetas share it too when they are one object, the
+        # fused first-dispatch case)
         emb = None
-        if self.fed.use_channel and any(n not in self._channels
-                                        for n in clients):
-            emb = self._probe_embeddings(theta)
-        channels = {n: self.channel_for(n, theta, emb=emb) for n in clients}
+        shared = (theta if not per_client
+                  else (theta[clients[0]]
+                        if len({id(theta[n]) for n in clients}) == 1
+                        else None))
+        if self.fed.use_channel and shared is not None and \
+                any(n not in self._channels for n in clients):
+            emb = self._probe_embeddings(shared)
+        channels = {n: self.channel_for(n, theta[n] if per_client
+                                        else theta, emb=emb)
+                    for n in clients}
         batches = {n: [next(iters[n]) for _ in range(n_steps)]
                    for n in clients}
         return self.engine.run_clients(theta, clients, splits, channels,
-                                       batches, prox_anchor=prox_anchor)
+                                       batches, prox_anchor=prox_anchor,
+                                       per_client_theta=per_client)
 
     # ------------------------------------------------------------------
     def evaluate(self, lora) -> float:
@@ -379,6 +406,24 @@ class Federation:
         losses = {n: res[n][1] for n in active}
         return locals_, weights, losses
 
+    def _fused_edge_round(self, actives, theta_ks, steps: int, iters, *,
+                          use_split: bool = True, prox_anchor=None):
+        """One local round for *every* edge group in a single dispatch:
+        each client carries its group's edge model into one stacked
+        (and, with a mesh, sharded) engine round instead of one
+        ``run_clients`` call per group.  Returns
+        ``(new_theta_ks, {client: loss})`` with each group's FedAvg
+        applied over its own members."""
+        thetas = {n: theta_ks[k] for k, act in actives.items() for n in act}
+        all_active = [n for act in actives.values() for n in act]
+        res = self.group_steps(all_active, thetas, steps, iters,
+                               use_split=use_split, prox_anchor=prox_anchor,
+                               per_client=True)
+        new_ks = {k: agg.fedavg([res[n][0] for n in act],
+                                [self.client_weight(n) for n in act])
+                  for k, act in actives.items()}
+        return new_ks, {n: res[n][1] for n in all_active}
+
     # ------------------------------------------------------------------
     def run(self, method: str = "elsa", global_rounds: int = 10,
             steps_per_round: int = 4, eval_every: int = 1,
@@ -416,8 +461,14 @@ class Federation:
 
         client_losses: Dict[int, List[float]] = {n: []
                                                  for n in range(fed.n_clients)}
+        # with a mesh, all edge groups dispatch as one sharded round per
+        # edge-round index (devices see one big stacked cohort, not one
+        # small dispatch per group); single-device keeps the historical
+        # per-group dispatch so default runs stay bit-identical
+        fuse = self.backend == "batched" and self.mesh is not None
         for g in range(global_rounds):
             edge_thetas, edge_alphas, losses = {}, {}, []
+            actives = {}
             for k, members in groups.items():
                 if not members:
                     continue
@@ -425,17 +476,39 @@ class Federation:
                 if method == "fedavg-random":
                     m = max(1, len(members) // 2)
                     active = list(rng.choice(members, m, replace=False))
-                theta_k = theta
+                actives[k] = active
+            anchor = theta if method == "fedprox" else None
+            if fuse:
+                theta_ks = {k: theta for k in actives}
+                round_maps = []
                 for _ in range(fed.t_rounds):
-                    locals_, weights, loss_map = self._edge_round(
-                        active, theta_k, steps_per_round, iters,
-                        use_split=use_split_dyn,
-                        prox_anchor=theta if method == "fedprox" else None)
-                    for n in active:
-                        losses.append(loss_map[n])
-                        client_losses[n].append(loss_map[n])
-                    theta_k = agg.fedavg(locals_, weights)
-                edge_thetas[k] = theta_k
+                    theta_ks, loss_map = self._fused_edge_round(
+                        actives, theta_ks, steps_per_round, iters,
+                        use_split=use_split_dyn, prox_anchor=anchor)
+                    round_maps.append(loss_map)
+                # record group-major (all of group k's edge rounds, then
+                # the next group), matching the per-group path exactly —
+                # np.mean over `losses` is order-sensitive in the last
+                # ulp, and the 1-device mesh history is pinned bitwise
+                for k, act in actives.items():
+                    for loss_map in round_maps:
+                        for n in act:
+                            losses.append(loss_map[n])
+                            client_losses[n].append(loss_map[n])
+                edge_thetas = theta_ks
+            else:
+                for k, active in actives.items():
+                    theta_k = theta
+                    for _ in range(fed.t_rounds):
+                        locals_, weights, loss_map = self._edge_round(
+                            active, theta_k, steps_per_round, iters,
+                            use_split=use_split_dyn, prox_anchor=anchor)
+                        for n in active:
+                            losses.append(loss_map[n])
+                            client_losses[n].append(loss_map[n])
+                        theta_k = agg.fedavg(locals_, weights)
+                    edge_thetas[k] = theta_k
+            for k, active in actives.items():
                 edge_alphas[k] = agg.edge_weight(
                     agg.mean_pairwise_kld(div, active),
                     float(np.mean(trust[active])))

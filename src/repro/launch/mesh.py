@@ -1,15 +1,24 @@
-"""Production mesh definitions.
+"""Production and federation mesh definitions.
 
 Single pod: 16x16 = 256 chips, axes ("data", "model").
 Multi-pod:  2x16x16 = 512 chips, axes ("pod", "data", "model") — the "pod"
 axis carries ELSA's hierarchical (edge-group -> cloud) aggregation stage.
+
+Federation mesh: a 1-D ("clients",) mesh (optionally ("pod", "clients"))
+over the first N available devices; the batched federation engine shards
+its stacked leading client axis across it while the frozen split-model
+parameters stay replicated.
 
 Defined as FUNCTIONS so importing this module never touches jax device
 state; the dry-run sets XLA_FLAGS before any jax import.
 """
 from __future__ import annotations
 
+from typing import Optional, Sequence
+
 import jax
+import numpy as np
+from jax.sharding import Mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -18,9 +27,38 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def make_federation_mesh(n_devices: Optional[int] = None, *,
+                         pods: int = 1,
+                         devices: Optional[Sequence] = None) -> Mesh:
+    """Mesh the batched federation engine shards clients across.
+
+    Takes the first ``n_devices`` of ``devices`` (default: all of
+    ``jax.devices()``) as a 1-D ``("clients",)`` mesh; ``pods > 1``
+    folds them into ``("pod", "clients")`` so the pod axis can carry the
+    edge-group -> cloud stage.  On CPU, export
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` *before* the
+    first jax import to get 8 host devices to shard across.
+    """
+    devs = list(devices) if devices is not None else jax.devices()
+    n = len(devs) if n_devices is None else n_devices
+    if not 1 <= n <= len(devs):
+        raise ValueError(f"requested {n} devices, have {len(devs)}")
+    if pods > 1:
+        if n % pods:
+            raise ValueError(f"{n} devices do not fold into {pods} pods")
+        grid = np.asarray(devs[:n]).reshape(pods, n // pods)
+        return Mesh(grid, ("pod", "clients"))
+    return Mesh(np.asarray(devs[:n]), ("clients",))
+
+
 def data_axes(mesh) -> tuple:
     """The (composite) batch-sharding axes present in this mesh."""
     return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def client_axes(mesh) -> tuple:
+    """The (composite) stacked-client-sharding axes in this mesh."""
+    return tuple(a for a in ("pod", "clients") if a in mesh.shape)
 
 
 def chips(mesh) -> int:

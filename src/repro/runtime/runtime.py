@@ -11,6 +11,13 @@ scheduler.  Usage::
     hist = fed.run("elsa", runtime=RuntimeConfig(policy="deadline"))
     hist["time"]       # simulated seconds per recorded round
     hist["trace"]      # EventTrace of dispatch/arrival/agg events
+
+A mesh-sharded federation (``Federation(..., mesh=...)``) works
+unchanged under every scheduler: each policy's ready-set dispatches
+route through ``Federation.group_steps`` into the batched engine, which
+shards the stacked client axis across the mesh — cohort bucket padding
+(to shard-multiple ladder sizes) keeps the deadline/async policies'
+varying ready sets on a bounded set of compiled executables.
 """
 from __future__ import annotations
 

@@ -1,9 +1,12 @@
 """Launcher helpers: batch partitioning, ELSA boundaries, mesh factory."""
+import jax
 import jax.numpy as jnp
+import pytest
 from jax.sharding import AbstractMesh, PartitionSpec as P
 
 from repro.configs import ASSIGNED, get_config
-from repro.launch.mesh import data_axes
+from repro.launch.mesh import (chips, client_axes, data_axes,
+                               make_federation_mesh)
 from repro.launch.train import batch_pspec, elsa_boundaries, elsa_channel_specs
 
 from conftest import make_abstract_mesh
@@ -25,6 +28,45 @@ def test_batch_pspec_indivisible_replicates():
 def test_data_axes():
     assert data_axes(MESH) == ("data",)
     assert data_axes(MESH3) == ("pod", "data")
+
+
+def test_chips():
+    assert chips(MESH) == 256
+    assert chips(MESH3) == 512
+
+
+def test_client_axes():
+    fm = make_federation_mesh(1)
+    assert client_axes(fm) == ("clients",)
+    assert client_axes(MESH) == ()           # production mesh: no clients
+    assert client_axes(MESH3) == ("pod",)    # pod folds into the stack
+
+
+def test_make_federation_mesh_defaults_to_all_devices():
+    n = len(jax.devices())
+    mesh = make_federation_mesh()
+    assert tuple(mesh.shape) == ("clients",)
+    assert mesh.shape["clients"] == n
+    assert chips(mesh) == n
+
+
+def test_make_federation_mesh_subset_and_validation():
+    assert chips(make_federation_mesh(1)) == 1
+    with pytest.raises(ValueError):
+        make_federation_mesh(len(jax.devices()) + 1)
+    with pytest.raises(ValueError):
+        make_federation_mesh(0)
+
+
+def test_make_federation_mesh_pods():
+    devs = jax.devices()
+    if len(devs) % 2 == 0 and len(devs) >= 2:
+        mesh = make_federation_mesh(pods=2)
+        assert tuple(mesh.shape) == ("pod", "clients")
+        assert mesh.shape["pod"] == 2
+        assert chips(mesh) == len(devs)
+    with pytest.raises(ValueError):
+        make_federation_mesh(1, pods=3)      # 1 device, 3 pods
 
 
 def test_elsa_boundaries_valid_for_all_archs():
