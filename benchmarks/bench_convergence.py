@@ -1,0 +1,115 @@
+"""Convergence study: aggregation mode x server optimizer x clipping.
+
+The study behind the tier-1 convergence gate (docs/convergence.md):
+runs the tuned small-federation config on BOTH registered model
+families and sweeps the three convergence-stack axes —
+
+- ``aggregate``: product-space (weight-delta mean, anchored pinv
+  re-fit) vs legacy factor averaging;
+- ``server_opt``: none vs bias-corrected FedAdam (small server lr);
+- ``clip_norm``: per-client global-norm clipping on vs off
+
+— recording final/best synthetic-task test accuracy per combination
+plus the task's chance level.  The headline numbers feed
+``benchmarks/check_regression.py``: the tuned stack's accuracy margin
+over chance is a CI floor, so the repo's accuracy claims cannot
+silently regress back to chance.
+
+Full mode (committed ``BENCH_convergence.json``) runs the gate-length
+schedules; ``--quick`` shortens the horizon for the CI smoke/gate but
+keeps every axis.
+"""
+import os
+
+from benchmarks.common import emit, write_json
+from repro.federation.simulation import FedConfig, Federation
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_convergence.json")
+
+# same base as tests/test_convergence.py (the gate configs), minus the
+# swept axes
+BASE = dict(n_clients=4, n_edges=2, alpha=5.0, poisoned=(),
+            total_examples=800, probe_q=8, local_warmup_steps=2,
+            layers=4, t_rounds=1, batch_size=16, seed=0, seq_len=32,
+            class_sharpness=10.0, background_frac=0.0, num_classes=4,
+            use_channel=False)
+
+FAMILIES = {
+    # family -> (fed overrides, rounds, steps, chance accuracy)
+    "bert-base": (dict(lr=5e-3, head_lr=0.4, pooling="mean"),
+                  20, 6, 0.25),
+    "llama3-8b": (dict(model="llama3-8b", vocab_size=32, lr=0.5),
+                  10, 12, 1.0 / 32),
+}
+
+#: (label, fed overrides) — the swept stack variants.  "tuned" is the
+#: product+clip core; "factor-agg"/"no-clip" each flip one of its axes
+#: off, and "fedadam" adds the server step on top (for bert-base that
+#: IS the tier-1 gate stack; the causal-LM gate runs the core without
+#: a server opt).  The gate metric below takes the better of
+#: tuned/fedadam per family, i.e. the best gate-candidate stack.
+VARIANTS = (
+    ("tuned", dict(aggregate="product", clip_norm=1.0)),
+    ("factor-agg", dict(aggregate="factor", clip_norm=1.0)),
+    ("no-clip", dict(aggregate="product", clip_norm=0.0)),
+    ("fedadam", dict(aggregate="product", clip_norm=1.0,
+                     server_opt="fedadam", server_lr=0.03)),
+)
+
+
+def _accuracy(kw: dict, rounds: int, steps: int):
+    fed = Federation(FedConfig(**kw))
+    h = fed.run("elsa", global_rounds=rounds, steps_per_round=steps)
+    return float(h["final_accuracy"]), float(max(h["accuracy"]))
+
+
+def run(quick: bool = False, write: bool = True, out: str = None):
+    results, margins = {}, []
+    for family, (overrides, rounds, steps, chance) in FAMILIES.items():
+        if quick:
+            rounds = max(rounds // 2 - 2, 4) if family == "bert-base" \
+                else 6
+        fam = {"chance": chance, "rounds": rounds, "steps": steps,
+               "variants": {}}
+        for label, stack in VARIANTS:
+            final, best = _accuracy({**BASE, **overrides, **stack},
+                                    rounds, steps)
+            fam["variants"][label] = {"final_accuracy": round(final, 4),
+                                      "best_accuracy": round(best, 4)}
+            emit(f"convergence_{family}_{label}", 0.0,
+                 f"final={final:.4f} best={best:.4f} chance={chance:.4f}")
+        tuned = max(fam["variants"]["tuned"]["final_accuracy"],
+                    fam["variants"]["fedadam"]["final_accuracy"])
+        fam["tuned_margin_over_chance"] = round(tuned - chance, 4)
+        margins.append(fam["tuned_margin_over_chance"])
+        results[family] = fam
+    payload = {
+        "config": {**{k: (list(v) if isinstance(v, tuple) else v)
+                      for k, v in BASE.items()}, "quick": quick},
+        "families": results,
+        # the regression-gate metric: worst tuned-stack margin over
+        # chance across families
+        "min_margin_over_chance": round(min(margins), 4),
+        # the headline comparison: product-space vs factor averaging
+        "product_beats_factor": {
+            f: round(r["variants"]["tuned"]["final_accuracy"]
+                     - r["variants"]["factor-agg"]["final_accuracy"], 4)
+            for f, r in results.items()},
+    }
+    if write:
+        write_json(os.path.abspath(out or OUT_PATH), payload)
+    return payload
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="shortened horizons for the CI gate (no BENCH "
+                         "json unless --out is given)")
+    ap.add_argument("--out", default=None,
+                    help="write the bench JSON here (CI regression gate)")
+    args = ap.parse_args()
+    print(run(quick=args.quick, write=args.out is not None or not args.quick,
+              out=args.out))

@@ -46,6 +46,14 @@ GATES = (
               "device counts (sharding must not cripple a round; CPU "
               "host devices share physical cores, so > 1x is not "
               "required)"),
+    Gate("convergence_margin", "BENCH_convergence.json",
+         lambda p: p["min_margin_over_chance"],
+         quick_floor=0.05, full_floor=0.15, committed_frac=0.7,
+         desc="worst tuned-stack test-accuracy margin over chance "
+              "across model families (quick mode runs a shortened "
+              "horizon, so its floor only guards against falling back "
+              "to chance-level accuracy; the full floor is the "
+              "tier-1 gate's chance+0.15 bar)"),
 )
 
 

@@ -1,4 +1,34 @@
-"""Edge- and cloud-level aggregation (ELSA §III.B.2, Eqs. 14–16)."""
+"""Edge- and cloud-level aggregation (ELSA §III.B.2, Eqs. 14–16).
+
+Two adapter-aggregation modes (:func:`aggregate_adapters`):
+
+- ``"factor"`` — the historical per-leaf weighted mean.  Averaging LoRA
+  factor pairs (A, B) leafwise is *wrong* in weight space: the implied
+  update is ``mean(A)·mean(B)``, not ``mean(A·B)``, so per-client
+  adapter progress pointing in different factor directions cancels even
+  when the weight-space deltas agree (HSplitLoRA, arXiv:2505.02795).
+  Kept behind the flag for golden parity with recorded histories.
+- ``"product"`` — aggregate in the product/weight-delta space: compute
+  each client's per-layer ``ΔW = A·B``, take the weighted mean of the
+  ΔW trees, and re-fit the factors to the mean *anchored at the factor
+  mean*: ``A ← mean(A_i)`` (optimization continuity — replacing A with
+  e.g. the delta's singular vectors every round churns the adapter
+  geometry and measurably stalls training) and
+  ``B ← mean(B_i) + A⁺ (ΔW_mean − A·mean(B_i))``, i.e. the factor
+  mean's residual against the true weight-space mean is folded into B
+  through A's pseudo-inverse.  The implied delta equals the projection
+  of ``ΔW_mean`` onto col(A), so its error against the true mean is
+  *never larger* than factor averaging's (the correction is a
+  projection), it is exact for a single client (the correction
+  vanishes), and exact whenever clients share A (heterogeneity only in
+  B — the residual then lies entirely in col(A)).
+
+Factor pairs are recognized structurally: any dict node holding both
+``<t>_a`` and ``<t>_b`` leaves whose ranks contract (``a``'s last axis
+== ``b``'s first axis after the shared leading layer-stack axis), which
+is exactly how :mod:`repro.models.common` lays LoRA adapters out.
+Non-pair leaves (pooler/head/bias) always take the plain weighted mean.
+"""
 from __future__ import annotations
 
 from typing import Dict, List, Sequence
@@ -24,6 +54,132 @@ def fedavg(trees: Sequence, weights: Sequence[float]):
     return jax.tree_util.tree_map(avg, *trees)
 
 
+# ---------------------------------------------------------------------------
+# product-space (weight-delta) adapter aggregation
+# ---------------------------------------------------------------------------
+
+def _pair_targets(node) -> List[str]:
+    """LoRA factor-pair targets in a dict node: ``t`` for ``t_a``/``t_b``."""
+    if not isinstance(node, dict):
+        return []
+    return sorted(t[:-2] for t in node
+                  if t.endswith("_a") and f"{t[:-2]}_b" in node)
+
+
+def _is_pair_node(node) -> bool:
+    return bool(_pair_targets(node))
+
+
+def pair_delta(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Per-layer weight delta ``ΔW = A·B`` of a layer-stacked factor pair.
+
+    ``a``: (L, ..., r) with the rank axis last; ``b``: (L, r, ...) with
+    the rank axis first after the layer axis.  Returns (L, m, k) with
+    ``m = prod(a.shape[1:-1])``, ``k = prod(b.shape[2:])`` — the
+    flattened per-layer delta matrices.  The LoRA ``alpha/r`` scale is a
+    shared constant and commutes with averaging, so deltas stay
+    unscaled here.
+    """
+    f = lambda ai, bi: (ai.reshape(-1, ai.shape[-1])
+                        @ bi.reshape(bi.shape[0], -1))
+    return jax.vmap(f)(a, b)
+
+
+def refactor_delta(dw: jnp.ndarray, a_mean: jnp.ndarray,
+                   b_mean: jnp.ndarray, eps: float = 1e-8):
+    """Re-fit a factor pair to the mean delta, anchored at the factor mean.
+
+    Per layer: ``A ← Ā`` and ``B ← B̄ + Ā⁺ (ΔW − Ā B̄)`` with
+    ``Ā⁺ = (ĀᵀĀ + εI)⁻¹ Āᵀ`` (an r×r ridge solve — r is the LoRA
+    rank, so this is tiny).  The correction adds exactly the part of
+    the factor-averaging error that lies in col(Ā); anything orthogonal
+    to the adapter's input subspace is unreachable at rank r without
+    replacing Ā, which destroys optimization continuity (measured: SVD
+    re-factorization stalls split-LM training even at n=1).
+    """
+    r = a_mean.shape[-1]
+
+    def f(a, b, d):
+        am = a.reshape(-1, r)
+        bm = b.reshape(r, -1)
+        res = d - am @ bm
+        gram = am.T @ am + eps * jnp.eye(r, dtype=am.dtype)
+        return bm + jnp.linalg.solve(gram, am.T @ res)
+
+    bn = jax.vmap(f)(a_mean, b_mean, dw)
+    return a_mean, bn.reshape(b_mean.shape).astype(b_mean.dtype)
+
+
+def tree_to_deltas(tree):
+    """Replace every factor pair with its ``<t>_dw`` product; other
+    leaves pass through.  The returned delta-tree is what edge→cloud
+    fusion carries in product mode."""
+    if isinstance(tree, dict):
+        if _is_pair_node(tree):
+            out = {k: v for k, v in tree.items()
+                   if k[:-2] not in _pair_targets(tree)}
+            for t in _pair_targets(tree):
+                out[f"{t}_dw"] = pair_delta(tree[f"{t}_a"], tree[f"{t}_b"])
+            return out
+        return {k: tree_to_deltas(v) for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        return type(tree)(tree_to_deltas(v) for v in tree)
+    return tree
+
+
+def deltas_to_tree(deltas, fmean):
+    """Re-fit the factor-mean tree ``fmean`` to a delta-tree: every
+    factor pair gets the anchored pinv correction; non-pair leaves are
+    taken from ``deltas`` (they were plain-averaged there)."""
+    if isinstance(fmean, dict):
+        if _is_pair_node(fmean):
+            out = {k: deltas[k] for k in fmean
+                   if k[:-2] not in _pair_targets(fmean)}
+            for t in _pair_targets(fmean):
+                a, b = refactor_delta(deltas[f"{t}_dw"],
+                                      fmean[f"{t}_a"],
+                                      fmean[f"{t}_b"])
+                out[f"{t}_a"], out[f"{t}_b"] = a, b
+            return out
+        return {k: deltas_to_tree(deltas[k], v)
+                for k, v in fmean.items()}
+    if isinstance(fmean, (list, tuple)):
+        return type(fmean)(deltas_to_tree(d, v)
+                           for d, v in zip(deltas, fmean))
+    return deltas
+
+
+def product_fedavg(trees: Sequence, weights: Sequence[float]):
+    """Weighted mean in the weight-delta space, re-fit to rank-r factors
+    anchored at the factor mean (see module docstring)."""
+    if len(trees) == 1:
+        return trees[0]        # exact: nothing to correct, zero churn
+    fmean = fedavg(trees, weights)
+    deltas = fedavg([tree_to_deltas(t) for t in trees], weights)
+    return deltas_to_tree(deltas, fmean)
+
+
+def aggregate_adapters(trees: Sequence, weights: Sequence[float],
+                       mode: str = "factor"):
+    """Mode dispatch: ``"factor"`` (legacy leafwise mean, bit-identical
+    to :func:`fedavg`) or ``"product"`` (weight-delta mean, re-fit to
+    factors by the anchored pinv correction — see module docstring)."""
+    if mode == "factor":
+        return fedavg(trees, weights)
+    if mode == "product":
+        return product_fedavg(trees, weights)
+    raise ValueError(f"unknown aggregation mode {mode!r}")
+
+
+def mix_adapters(theta, update, w: float, mode: str = "factor"):
+    """Asynchronous edge fold ``θ ← (1-w)·θ + w·update`` in the chosen
+    space (the async scheduler's staleness-weighted mixing)."""
+    if mode == "product":
+        return product_fedavg([theta, update], [1.0 - w, w])
+    return jax.tree_util.tree_map(lambda a, b: (1.0 - w) * a + w * b,
+                                  theta, update)
+
+
 def edge_weight(mean_pairwise_kld: float, mean_trust: float) -> float:
     """Eq. 14: alpha_k = (1 / (1 + R̄_k)) * w̄_k^trust."""
     return (1.0 / (1.0 + mean_pairwise_kld)) * mean_trust
@@ -39,11 +195,19 @@ def mean_pairwise_kld(div: np.ndarray, members: List[int]) -> float:
 
 
 def cloud_aggregate(edge_params: Dict[int, object],
-                    alphas: Dict[int, float]):
-    """Eq. 15: theta_g = sum_k alpha~_k theta_{g,k}."""
+                    alphas: Dict[int, float], mode: str = "factor"):
+    """Eq. 15: theta_g = sum_k alpha~_k theta_{g,k}.
+
+    In ``"product"`` mode the fusion is carried in delta-tree space:
+    each edge model's factor pairs are converted to weight deltas, the
+    coherence/trust-weighted mean is taken over the delta-trees, and
+    the result is re-factored to rank r exactly once — so cloud fusion
+    never averages factor pairs leafwise.
+    """
     ks = sorted(edge_params)
     weights = [max(alphas[k], 0.0) for k in ks]
-    return fedavg([edge_params[k] for k in ks], weights)
+    return aggregate_adapters([edge_params[k] for k in ks], weights,
+                              mode=mode)
 
 
 def _sq_norm(theta_new, theta_old) -> float:

@@ -23,6 +23,17 @@ class SplitPolicy:
         assert self.p_max + self.o_fix < self.num_blocks, \
             "p_max + o_fix must leave at least one block for the edge"
         assert abs(self.lambda1 + self.lambda2 - 1.0) < 1e-9
+        if self.p_max < self.p_min or self.p_min < 1:
+            # a p_max below p_min silently yields splits like
+            # Split(p=-1, ...), whose negative block indices wrap around
+            # and run the LAST layer as Part 1/2 — training then runs a
+            # scrambled deeper network than evaluation (the discrepancy
+            # behind chance-level accuracy on too-shallow configs)
+            raise ValueError(
+                f"model too shallow to split: need num_blocks >= "
+                f"p_min + 1 + o_fix = {self.p_min + 1 + self.o_fix} "
+                f"(got M={self.num_blocks}, p range "
+                f"[{self.p_min}, {self.p_max}], o={self.o_fix})")
 
 
 def offload_score(h_n: float, h_max: float, b_n: float, b_max: float,

@@ -31,6 +31,13 @@ of recompiling for every distinct cohort size.  The FedProx anchor term
 vectorizes by broadcasting the shared anchor tree against the
 client-stacked parameters (:func:`repro.optim.fedprox_gradient`).
 
+The client update supports the convergence stack (docs/convergence.md):
+per-client global-norm gradient clipping (``clip_norm`` — vmapped along
+the stacked client axis, so each client's cap is its own) and per-group
+learning rates (``head_lr`` for every leaf outside the ``blocks`` /
+``prefix`` adapter subtrees).  Both default off, in which case the
+update is bit-identical to the historical ``p - lr * g``.
+
 Passing ``mesh=`` (see :func:`repro.launch.mesh.make_federation_mesh`)
 shards the stacked client axis across the mesh's ``("clients",)`` (or
 ``("pod", "clients")``) axes via :class:`jax.sharding.NamedSharding`:
@@ -65,7 +72,8 @@ from repro.core.ssop import SSOP
 from repro.data.pipeline import stack_padded_batches
 from repro.launch.mesh import client_axes
 from repro.models.split_api import as_split_model
-from repro.optim import fedprox_gradient
+from repro.optim import (adapter_head_lr_tree, clip_by_global_norm,
+                         fedprox_gradient)
 
 PROX_MU = 0.01   # matches the reference path's hardcoded FedProx weight
 
@@ -168,12 +176,15 @@ class BatchedEngine:
     def __init__(self, model, frozen, plan: Optional[SketchPlan], *,
                  lr: float, batch_size: int, use_channel: bool,
                  use_ssop: bool, prox_mu: float = PROX_MU,
-                 pad_cohorts: bool = True, mesh: Optional[Mesh] = None):
+                 pad_cohorts: bool = True, mesh: Optional[Mesh] = None,
+                 head_lr: Optional[float] = None, clip_norm: float = 0.0):
         self.model = as_split_model(model)
         self.cfg = self.model.cfg
         self.frozen = frozen
         self.plan = plan
         self.lr = lr
+        self.head_lr = head_lr       # None -> lr (single-group legacy)
+        self.clip_norm = clip_norm   # 0 -> no per-client gradient clipping
         self.batch_size = batch_size
         self.use_channel = use_channel
         self.use_ssop = use_ssop
@@ -215,6 +226,7 @@ class BatchedEngine:
 
         model, plan = self.model, self.plan
         lr, mu = self.lr, self.prox_mu
+        head_lr, clip_norm = self.head_lr, self.clip_norm
         with_ssop = self.use_channel and self.use_ssop
         chan_plan = plan if self.use_channel else None
 
@@ -228,6 +240,10 @@ class BatchedEngine:
         def round_fn(frozen, lora_stack, ssop_stack, anchor,
                      tokens, labels, weights):
             ssop_axis = 0 if ssop_stack is not None else None
+            # per-leaf python-float lrs (adapter vs head groups); with
+            # head_lr=None every leaf is exactly `lr`, so the update
+            # below stays bit-identical to the historical `p - lr * g`
+            lrs = adapter_head_lr_tree(lora_stack, lr, head_lr)
 
             def step(stack, xs):
                 tok, lab, wt = xs
@@ -237,8 +253,12 @@ class BatchedEngine:
                         frozen, stack, ssop_stack, tok, lab, wt)
                 if prox:
                     grads = fedprox_gradient(grads, stack, anchor, mu)
+                if clip_norm > 0:
+                    # per-client global-norm clip along the stacked axis
+                    grads = jax.vmap(
+                        lambda g: clip_by_global_norm(g, clip_norm))(grads)
                 stack = jax.tree_util.tree_map(
-                    lambda p, g: p - lr * g, stack, grads)
+                    lambda p, g, s: p - s * g, stack, grads, lrs)
                 return stack, losses
 
             final, losses = jax.lax.scan(step, lora_stack,

@@ -48,7 +48,9 @@ from repro.federation.engine import (BatchedEngine, is_client_map,
 from repro.federation.topology import make_topology
 from repro.models.params import init_tree
 from repro.models.split_api import get_split_model
-from repro.optim import SGD, AdamW, FedProx, FedAMS, fedprox_gradient
+from repro.optim import (SGD, AdamW, FedAdam, FedProx, FedAMS,
+                         adapter_head_lr_tree, clip_by_global_norm,
+                         fedprox_gradient)
 
 
 @dataclasses.dataclass
@@ -87,8 +89,30 @@ class FedConfig:
                                          # (paper §IV.A heterogeneity setup)
     dtype: str = "float32"               # params+activations; parity tests
                                          # use float64 (needs jax x64 mode)
+    # -- convergence stack (docs/convergence.md) -------------------------
+    aggregate: str = "product"           # LoRA aggregation space:
+                                         # "product" (weight-delta mean,
+                                         # anchored pinv re-fit) or
+                                         # "factor" (legacy leafwise
+                                         # mean, golden-pinned)
+    clip_norm: float = 0.0               # >0: per-client global-norm clip
+    head_lr: float = 0.0                 # >0: readout-head lr (adapters
+                                         # keep ``lr``); 0 -> ``lr``
+    server_opt: str = "none"             # cloud pseudo-gradient step:
+                                         # "none" | "fedadam" | "fedams"
+                                         # (overrides the method default)
+    server_lr: float = 0.05              # server-opt lr (FedAdam tuning)
+    pooling: str = "cls"                 # encoder readout: "cls" | "mean"
+    vocab_size: int = 0                  # >0: override the model vocab
+                                         # (small-vocab synthetic tasks)
 
     def __post_init__(self):
+        if self.aggregate not in ("product", "factor"):
+            raise ValueError(f"unknown aggregate mode {self.aggregate!r}")
+        if self.server_opt not in ("none", "fedadam", "fedams"):
+            raise ValueError(f"unknown server_opt {self.server_opt!r}")
+        if self.pooling not in ("cls", "mean"):
+            raise ValueError(f"unknown pooling {self.pooling!r}")
         # warn only when the deprecated spelling actually carries intent:
         # after resolution bert_layers mirrors layers, so reconstruction
         # round-trips (dataclasses.replace / FedConfig(**asdict(...)))
@@ -127,8 +151,15 @@ class Federation:
         self.backend = backend
         self.mesh = mesh
         self.fed = fed
+        overrides = {}
+        if fed.vocab_size:
+            overrides["vocab_size"] = fed.vocab_size
         self.model = get_split_model(fed.model, num_layers=fed.layers,
-                                     dtype=fed.dtype)
+                                     dtype=fed.dtype,
+                                     pooling=(fed.pooling
+                                              if fed.pooling != "cls"
+                                              else None),
+                                     **overrides)
         self.cfg = self.model.cfg
         self.task = SyntheticTaskConfig(vocab_size=self.cfg.vocab_size,
                                         num_classes=fed.num_classes,
@@ -176,8 +207,23 @@ class Federation:
                 self.model, self.frozen, self.plan, lr=self.fed.lr,
                 batch_size=self.fed.batch_size,
                 use_channel=self.fed.use_channel,
-                use_ssop=self.fed.use_ssop, mesh=self.mesh)
+                use_ssop=self.fed.use_ssop, mesh=self.mesh,
+                head_lr=self.fed.head_lr or None,
+                clip_norm=self.fed.clip_norm)
         return self._engine
+
+    def server_optimizer(self, method: str):
+        """Cloud pseudo-gradient optimizer, shared by the round loop and
+        every runtime scheduler (so `policy="sync"` parity holds under
+        any server-opt config).  ``FedConfig.server_opt`` overrides the
+        method default; the legacy ``method="fedams"`` baseline keeps
+        its historical untuned FedAMS(lr=1.0)."""
+        fed = self.fed
+        if fed.server_opt == "fedadam":
+            return FedAdam(lr=fed.server_lr)
+        if fed.server_opt == "fedams":
+            return FedAMS(lr=fed.server_lr)
+        return FedAMS(lr=1.0) if method == "fedams" else None
 
     def _default_split(self) -> Split:
         return Split(self.policy.p_max,
@@ -242,6 +288,7 @@ class Federation:
                  else self._default_split())
         channel = self.channel_for(client, lora)
         gfn = self._grad_fn(client, split)
+        lrs = adapter_head_lr_tree(lora, fed.lr, fed.head_lr or None)
         losses = []
         for _ in range(n_steps):
             tok, lab = next(it)
@@ -249,8 +296,10 @@ class Federation:
             lv, g = gfn(lora, batch, channel)
             if prox_anchor is not None:
                 g = fedprox_gradient(g, lora, prox_anchor, 0.01)
+            if fed.clip_norm > 0:
+                g = clip_by_global_norm(g, fed.clip_norm)
             lora = jax.tree_util.tree_map(
-                lambda p, gg: p - fed.lr * gg, lora, g)
+                lambda p, gg, s: p - s * gg, lora, g, lrs)
             losses.append(float(lv))
         return lora, float(np.mean(losses))
 
@@ -419,8 +468,10 @@ class Federation:
         res = self.group_steps(all_active, thetas, steps, iters,
                                use_split=use_split, prox_anchor=prox_anchor,
                                per_client=True)
-        new_ks = {k: agg.fedavg([res[n][0] for n in act],
-                                [self.client_weight(n) for n in act])
+        new_ks = {k: agg.aggregate_adapters(
+                      [res[n][0] for n in act],
+                      [self.client_weight(n) for n in act],
+                      mode=self.fed.aggregate)
                   for k, act in actives.items()}
         return new_ks, {n: res[n][1] for n in all_active}
 
@@ -456,7 +507,7 @@ class Federation:
                                      self.data[n].labels, fed.batch_size,
                                      seed=fed.seed + 100 + n)
                  for n in range(fed.n_clients)}
-        server_opt = FedAMS(lr=1.0) if method == "fedams" else None
+        server_opt = self.server_optimizer(method)
         server_state = server_opt.init(theta) if server_opt else None
 
         client_losses: Dict[int, List[float]] = {n: []
@@ -506,7 +557,8 @@ class Federation:
                         for n in active:
                             losses.append(loss_map[n])
                             client_losses[n].append(loss_map[n])
-                        theta_k = agg.fedavg(locals_, weights)
+                        theta_k = agg.aggregate_adapters(
+                            locals_, weights, mode=fed.aggregate)
                     edge_thetas[k] = theta_k
             for k, active in actives.items():
                 edge_alphas[k] = agg.edge_weight(
@@ -514,10 +566,12 @@ class Federation:
                     float(np.mean(trust[active])))
 
             if method in ("elsa", "elsa-fixed", "elsa-nocluster"):
-                theta_new = agg.cloud_aggregate(edge_thetas, edge_alphas)
+                theta_new = agg.cloud_aggregate(edge_thetas, edge_alphas,
+                                                mode=fed.aggregate)
             else:
                 ws = {k: 1.0 for k in edge_thetas}
-                theta_new = agg.cloud_aggregate(edge_thetas, ws)
+                theta_new = agg.cloud_aggregate(edge_thetas, ws,
+                                                mode=fed.aggregate)
 
             if server_opt is not None:
                 pseudo = jax.tree_util.tree_map(lambda a, b: a - b, theta,

@@ -168,12 +168,43 @@ class SplitModel:
 
 class BertSplitModel(SplitModel):
     """The paper's own model (§IV.A): post-LN encoder, [CLS] pooler +
-    classification head (both trainable alongside the LoRA adapters)."""
+    classification head (both trainable alongside the LoRA adapters).
+
+    ``pooling`` selects the readout: ``"cls"`` (position 0 through the
+    tanh pooler, the paper's convention — requires the [CLS] token to
+    carry attention-mixed sequence signal) or ``"mean"`` (mean over
+    positions straight into the linear classifier — the friendlier
+    readout the convergence study uses: every position's
+    class-conditional unigram evidence reaches the logits directly,
+    matching how the causal-LM family already mean-pools its probe
+    representations, and the saturating tanh pooler — which caps the
+    usable head lr — drops out of the gradient path).
+    """
 
     task = "classification"
 
+    def __init__(self, cfg: ArchConfig, pooling: str = "cls"):
+        if pooling not in ("cls", "mean"):
+            raise ValueError(f"unknown pooling {pooling!r}")
+        super().__init__(cfg)
+        self.pooling = pooling
+
+    def with_pooling(self, pooling: str) -> "BertSplitModel":
+        return type(self)(self.cfg, pooling)
+
     def specs(self, num_classes: int = 2):
-        return bert_mod.bert_specs(self.cfg, num_classes)
+        specs = bert_mod.bert_specs(self.cfg, num_classes)
+        if self.pooling == "mean":
+            # zero-init the linear classifier: the mean-pool readout is
+            # logits = mean(x) @ W + b, and a large random W makes the
+            # model ride the random-init function (it memorizes the
+            # training shard along random directions and generalizes at
+            # chance).  Starting at W=0 the head learns the actual
+            # class-mean geometry.  ("cls" keeps the historical random
+            # init — golden-pinned.)
+            w = specs["lora"]["head"]["w"]
+            specs["lora"]["head"]["w"] = w._replace(init="zeros")
+        return specs
 
     def embed(self, frozen, tokens):
         return bert_mod.embed(self.cfg, frozen, tokens)
@@ -184,6 +215,11 @@ class BertSplitModel(SplitModel):
                                    mask_valid)
 
     def head(self, frozen, lora, x):
+        if self.pooling == "mean":
+            src = x.mean(axis=1)
+            logits = src @ lora["head"]["w"].astype(src.dtype) \
+                + lora["head"]["b"].astype(src.dtype)
+            return src, logits
         cls = x[:, 0, :]
         pooled = jnp.tanh(cls @ lora["pooler"]["w"].astype(cls.dtype)
                           + lora["pooler"]["b"].astype(cls.dtype))
@@ -349,31 +385,43 @@ def available_split_models():
 
 def get_split_model(name: str, *, num_layers: Optional[int] = None,
                     dtype: Optional[str] = None, reduced: bool = True,
+                    pooling: Optional[str] = None,
                     **overrides) -> SplitModel:
     """Resolve a registered architecture name to a ``SplitModel``.
 
     By default the arch config is ``reduced()`` (the federation runs
     CPU-sized models) and then overridden with ``num_layers`` / ``dtype``
-    / any ``ArchConfig.with_`` keyword.
+    / any ``ArchConfig.with_`` keyword.  ``pooling`` selects a readout
+    variant on adapters that support one (the encoder family's
+    ``"cls"``/``"mean"``); passing it for a family without pooling
+    options is an error.
     """
     if name not in _REGISTRY:
         raise KeyError(f"unknown split model {name!r}; registered: "
                        f"{available_split_models()}")
     target = _REGISTRY[name]
     if callable(target):
-        return target(num_layers=num_layers, dtype=dtype, **overrides)
-    cfg = get_config(target)
-    if reduced:
-        cfg = cfg.reduced()
-    kw = dict(overrides)
-    if num_layers is not None:
-        kw["num_layers"] = num_layers
-    if dtype is not None:
-        kw.setdefault("param_dtype", dtype)
-        kw.setdefault("activation_dtype", dtype)
-    if kw:
-        cfg = cfg.with_(**kw)
-    return split_model_for(cfg)
+        m = target(num_layers=num_layers, dtype=dtype, **overrides)
+    else:
+        cfg = get_config(target)
+        if reduced:
+            cfg = cfg.reduced()
+        kw = dict(overrides)
+        if num_layers is not None:
+            kw["num_layers"] = num_layers
+        if dtype is not None:
+            kw.setdefault("param_dtype", dtype)
+            kw.setdefault("activation_dtype", dtype)
+        if kw:
+            cfg = cfg.with_(**kw)
+        m = split_model_for(cfg)
+    if pooling is not None:
+        if not hasattr(m, "with_pooling"):
+            raise ValueError(
+                f"model {name!r} ({type(m).__name__}) has no pooling "
+                "options; pooling= only applies to the encoder family")
+        m = m.with_pooling(pooling)
+    return m
 
 
 # every zoo config with a family adapter is split-federable out of the box

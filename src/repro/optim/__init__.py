@@ -1,6 +1,8 @@
 """Optimizers (no optax): AdamW, SGD+momentum, FedProx proximal wrapper,
-FedAMS server optimizer, LR schedules."""
-from repro.optim.optimizers import (AdamW, SGD, FedProx, FedAMS,
-                                    Optimizer, fedprox_gradient)  # noqa: F401
-from repro.optim.schedules import (constant, cosine_decay,
-                                   warmup_cosine)  # noqa: F401
+FedAdam/FedAMS server optimizers, global-norm clipping, LR schedules."""
+from repro.optim.optimizers import (AdamW, SGD, FedAdam, FedProx, FedAMS,
+                                    Optimizer, clip_by_global_norm,
+                                    fedprox_gradient,
+                                    global_norm)  # noqa: F401
+from repro.optim.schedules import (adapter_head_lr_tree, constant,
+                                   cosine_decay, warmup_cosine)  # noqa: F401

@@ -1,7 +1,31 @@
-"""Learning-rate schedules (multiplicative factors on the base lr)."""
+"""Learning-rate schedules (multiplicative factors on the base lr) and
+per-parameter-group learning rates."""
 from __future__ import annotations
 
+from typing import Optional
+
+import jax
 import jax.numpy as jnp
+
+
+def adapter_head_lr_tree(lora_like, lr: float,
+                         head_lr: Optional[float] = None):
+    """Per-leaf learning rates: adapter vs readout-head groups.
+
+    Every leaf under the top-level ``"blocks"`` (and ``"prefix"``)
+    subtrees — the LoRA adapters inside the block stack — gets ``lr``;
+    everything else (pooler, classification head, any readout parameter
+    outside the stack) gets ``head_lr`` (default: ``lr``).  Leaves are
+    exact python floats, so with ``head_lr=None`` the update
+    ``p - lr_leaf * g`` is bit-identical to the historical scalar
+    ``p - lr * g``.
+    """
+    hl = lr if head_lr is None else head_lr
+    if not isinstance(lora_like, dict):
+        return jax.tree_util.tree_map(lambda _: lr, lora_like)
+    return {k: jax.tree_util.tree_map(
+                lambda _: lr if k in ("blocks", "prefix") else hl, v)
+            for k, v in lora_like.items()}
 
 
 def constant():

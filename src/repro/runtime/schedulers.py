@@ -29,7 +29,6 @@ import numpy as np
 
 from repro.core import aggregation as agg
 from repro.data.pipeline import infinite_batches
-from repro.optim import FedAMS
 from repro.runtime.client import ClientRuntimeState
 from repro.runtime.events import (ARRIVAL, CLOUD_AGG, DISPATCH, EDGE_AGG,
                                   EVAL, OFFLINE, REJOIN, Event, EventQueue)
@@ -37,10 +36,11 @@ from repro.runtime.events import (ARRIVAL, CLOUD_AGG, DISPATCH, EDGE_AGG,
 ELSA_METHODS = ("elsa", "elsa-fixed", "elsa-nocluster")
 
 
-def _mix(theta, update, w: float):
-    """theta <- (1-w) theta + w update (async edge fold)."""
-    return jax.tree_util.tree_map(lambda a, b: (1.0 - w) * a + w * b,
-                                  theta, update)
+def _mix(theta, update, w: float, mode: str = "factor"):
+    """theta <- (1-w) theta + w update (async edge fold); in product
+    mode the mix happens in weight-delta space (factor-space mixing has
+    the same cross-term cancellation as factor averaging)."""
+    return agg.mix_adapters(theta, update, w, mode=mode)
 
 
 class _SchedulerBase:
@@ -62,7 +62,7 @@ class _SchedulerBase:
                                      self.fed.data[n].labels, fc.batch_size,
                                      seed=fc.seed + 100 + n)
                  for n in range(fc.n_clients)}
-        server_opt = FedAMS(lr=1.0) if method == "fedams" else None
+        server_opt = self.fed.server_optimizer(method)
         server_state = server_opt.init(self.fed.lora0) if server_opt \
             else None
         return rng, groups, div, trust, iters, server_opt, server_state
@@ -76,11 +76,13 @@ class _SchedulerBase:
     # -- cloud fusion (identical math to Federation.run) -------------------
     def _cloud_fuse(self, method: str, edge_thetas, edge_alphas, theta,
                     server_opt, server_state):
+        mode = self.fc.aggregate
         if method in ELSA_METHODS:
-            theta_new = agg.cloud_aggregate(edge_thetas, edge_alphas)
+            theta_new = agg.cloud_aggregate(edge_thetas, edge_alphas,
+                                            mode=mode)
         else:
             ws = {k: 1.0 for k in edge_thetas}
-            theta_new = agg.cloud_aggregate(edge_thetas, ws)
+            theta_new = agg.cloud_aggregate(edge_thetas, ws, mode=mode)
         if server_opt is not None:
             pseudo = jax.tree_util.tree_map(lambda a, b: a - b, theta,
                                             theta_new)
@@ -189,7 +191,8 @@ class SyncScheduler(_SchedulerBase):
                     for n in avail:
                         losses.append(loss_map[n])
                         client_losses[n].append(loss_map[n])
-                    theta_k = agg.fedavg(locals_, weights)
+                    theta_k = agg.aggregate_adapters(locals_, weights,
+                                                     mode=fc.aggregate)
                     t_k = barrier
                     self.trace.log(t_k, EDGE_AGG, -1, k, round=g,
                                    n_updates=len(avail))
@@ -348,9 +351,12 @@ class DeadlineScheduler(_SchedulerBase):
         absent_w = max(float(sum(fed.client_weight(n) for n in active))
                        - rep_w, 0.0)
         if absent_w > 0:
-            theta_k = agg.fedavg([theta_k] + upds, [absent_w] + wts)
+            theta_k = agg.aggregate_adapters([theta_k] + upds,
+                                             [absent_w] + wts,
+                                             mode=self.fc.aggregate)
         else:
-            theta_k = agg.fedavg(upds, wts)
+            theta_k = agg.aggregate_adapters(upds, wts,
+                                             mode=self.fc.aggregate)
         self.trace.log(deadline, EDGE_AGG, -1, k, round=g,
                        n_updates=len(upds), n_stragglers=n_late)
         edge_round_idx[k] = r_idx + 1
@@ -448,7 +454,8 @@ class AsyncScheduler(_SchedulerBase):
                 s = states[n].staleness(version[k])
                 w = min(1.0, self.rcfg.async_alpha
                         / (1.0 + s) ** self.rcfg.staleness_decay)
-                edge_theta[k] = _mix(edge_theta[k], lora_n, w)
+                edge_theta[k] = _mix(edge_theta[k], lora_n, w,
+                                     mode=fc.aggregate)
                 version[k] += 1
                 window_losses.append(loss_n)
                 client_losses[n].append(loss_n)

@@ -1,10 +1,39 @@
-"""Theorem 1 sanity on a controlled testbed: O(1/sqrt(G)) decay of the
-average gradient norm plus a non-vanishing non-IID floor (sigma_2^2)."""
+"""Convergence coverage in two tiers:
+
+1. Theorem 1 sanity on a controlled quadratic testbed: O(1/sqrt(G))
+   decay of the average gradient norm plus a non-vanishing non-IID
+   floor (sigma_2^2).
+2. The tier-1 convergence gate: the tuned stack (product-space adapter
+   aggregation + global-norm clipping + per-group lrs + mean-pool
+   readout + bias-corrected FedAdam server step) must reach
+   above-chance test accuracy (>= chance + 0.15) on the synthetic task
+   for BOTH registered model families — the repo's accuracy claims stay
+   CI-gated instead of aspirational (docs/convergence.md has the study
+   behind these hyperparameters).
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core.aggregation import fedavg
+from repro.federation.simulation import FedConfig, Federation
+
+# the tuned convergence stack (docs/convergence.md): small federation,
+# 4-layer reduced models, valid tripartite split (layers >= 4), mild
+# label skew, uncompressed activations (the sketch-channel-on gap is a
+# tracked open item, not part of this gate)
+CONV_BASE = dict(n_clients=4, n_edges=2, alpha=5.0, poisoned=(),
+                 total_examples=800, probe_q=8, local_warmup_steps=2,
+                 layers=4, t_rounds=1, batch_size=16, seed=0,
+                 seq_len=32, class_sharpness=10.0, background_frac=0.0,
+                 num_classes=4, use_channel=False, clip_norm=1.0)
+
+BERT_GATE = dict(CONV_BASE, lr=5e-3, head_lr=0.4, pooling="mean",
+                 server_opt="fedadam", server_lr=0.03)
+# causal LM: the readout is the frozen vocab projection, so ALL the
+# learning happens in the clipped rank-4 adapters — large clipped lr
+LM_GATE = dict(CONV_BASE, model="llama3-8b", vocab_size=32, lr=0.5)
 
 
 def _make_clients(n_clients, d, hetero, seed=0):
@@ -66,3 +95,43 @@ def test_sketch_noise_vanishes_with_g():
     noisy = _run_fed(centers, 128, sketch_noise=0.5)
     assert noisy[-16:].mean() < noisy[:16].mean()   # still converging
     assert clean[-16:].mean() <= noisy[-16:].mean() + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# tier-1 convergence gate: above-chance accuracy, both model families
+# ---------------------------------------------------------------------------
+
+def _chance(fed: Federation) -> float:
+    """Chance-level test accuracy for the federation's task."""
+    if fed.model.task == "causal-lm":
+        return 1.0 / fed.model.cfg.vocab_size
+    return 1.0 / fed.fed.num_classes
+
+
+@pytest.mark.parametrize("name,kw,rounds,steps", [
+    ("bert-base", BERT_GATE, 20, 6),
+    ("llama3-8b", LM_GATE, 14, 12),
+])
+def test_tuned_stack_beats_chance(name, kw, rounds, steps):
+    """The convergence rescue, pinned: deterministic seed, batched
+    backend, final test accuracy >= chance + 0.15 (4-class
+    classification: chance 0.25; next-token over the 32-token vocab:
+    chance 1/32)."""
+    fed = Federation(FedConfig(**kw), backend="batched")
+    h = fed.run("elsa", global_rounds=rounds, steps_per_round=steps)
+    chance = _chance(fed)
+    assert h["final_accuracy"] >= chance + 0.15, \
+        (f"{name}: final accuracy {h['final_accuracy']:.3f} below "
+         f"chance+0.15 = {chance + 0.15:.3f} "
+         f"(history: {[round(a, 3) for a in h['accuracy']]})")
+    # and it actually trained (loss moved), not a lucky readout
+    assert h["loss"][-1] < h["loss"][0]
+
+
+def test_shallow_split_rejected():
+    """Models too shallow for a valid tripartite split (p >= 1, q >= 1,
+    o = 2 needs M >= 4) are rejected at construction instead of
+    silently wrapping negative block indices (the train/eval-mismatch
+    bug behind chance-level accuracy on 2-layer configs)."""
+    with pytest.raises(ValueError, match="too shallow"):
+        Federation(FedConfig(**dict(BERT_GATE, layers=3)))

@@ -8,10 +8,12 @@ hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import ssop as ssop_mod
+from repro.core import aggregation as agg
 from repro.core.fingerprint import fingerprint, kl_gaussian, sym_kl
 from repro.core.sketch import _median, compress, decompress, make_plan
 from repro.core.splitting import SplitPolicy, split_for_client
 from repro.core.aggregation import fedavg
+from repro.optim import clip_by_global_norm, global_norm
 
 SETTINGS = dict(max_examples=20, deadline=None)
 
@@ -94,6 +96,108 @@ def test_fedavg_convexity(weights):
     out = fedavg(trees, weights)
     w = np.asarray(out["w"])
     assert (w >= 0 - 1e-5).all() and (w <= len(weights) - 1 + 1e-5).all()
+
+
+# ---------------------------------------------------------------------------
+# global-norm gradient clipping
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(st.integers(0, 500), st.floats(1e-3, 10.0))
+def test_clip_norm_never_exceeds_cap(seed, cap):
+    rng = np.random.default_rng(seed)
+    g = {"a": jnp.asarray(rng.standard_normal((3, 5)), jnp.float32),
+         "b": {"c": jnp.asarray(rng.standard_normal(7) * 10, jnp.float32)}}
+    c = clip_by_global_norm(g, cap)
+    assert float(global_norm(c)) <= cap * (1 + 1e-5)
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 500))
+def test_clip_preserves_direction_and_noops_under_cap(seed):
+    rng = np.random.default_rng(seed)
+    g = {"a": jnp.asarray(rng.standard_normal(12), jnp.float32)}
+    n = float(global_norm(g))
+    # under the cap: exact identity (scale 1.0)
+    under = clip_by_global_norm(g, n * 2.0)
+    np.testing.assert_array_equal(np.asarray(under["a"]), np.asarray(g["a"]))
+    # over the cap: same direction, norm == cap
+    over = clip_by_global_norm(g, n / 3.0)
+    cos = float(jnp.vdot(over["a"], g["a"])
+                / (jnp.linalg.norm(over["a"]) * jnp.linalg.norm(g["a"])))
+    assert abs(cos - 1.0) < 1e-5
+    np.testing.assert_allclose(float(global_norm(over)), n / 3.0, rtol=1e-5)
+
+
+def test_clip_zero_grads_safe():
+    z = {"a": jnp.zeros((4, 4)), "b": jnp.zeros(3)}
+    c = clip_by_global_norm(z, 1.0)
+    for leaf in jax.tree_util.tree_leaves(c):
+        assert bool(jnp.isfinite(leaf).all()) and float(jnp.abs(leaf).max()) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# product-space (weight-delta) adapter aggregation
+# ---------------------------------------------------------------------------
+
+def _factor_tree(seed, L=2, d=6, r=2, heads=2, hd=3, a=None):
+    rng = np.random.default_rng(seed)
+    return {"blocks": {"attn": {
+        "q_a": (a if a is not None else
+                jnp.asarray(rng.standard_normal((L, d, r)), jnp.float32)),
+        "q_b": jnp.asarray(rng.standard_normal((L, r, heads, hd)),
+                           jnp.float32),
+    }}, "head": {"w": jnp.asarray(rng.standard_normal((d, 4)), jnp.float32)}}
+
+
+def _delta(tree):
+    return agg.tree_to_deltas(tree)["blocks"]["attn"]["q_dw"]
+
+
+def test_product_aggregation_single_client_identity():
+    """n=1 reduces to the client's tree exactly (delta and factors)."""
+    t = _factor_tree(0)
+    out = agg.product_fedavg([t], [3.0])
+    for a, b in zip(jax.tree_util.tree_leaves(out),
+                    jax.tree_util.tree_leaves(t)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 200),
+       st.lists(st.floats(0.1, 10.0), min_size=2, max_size=4))
+def test_product_aggregation_shared_a_exact_mean(seed, weights):
+    """Clients sharing A (heterogeneity only in B): the aggregated
+    delta IS the weighted-mean delta (factor averaging is exact there
+    and the pinv correction must not disturb it)."""
+    a = jnp.asarray(np.random.default_rng(seed).standard_normal((2, 6, 2)),
+                    jnp.float32)
+    trees = [_factor_tree(seed + 1 + i, a=a) for i in range(len(weights))]
+    out = agg.product_fedavg(trees, weights)
+    w = np.asarray(weights) / np.sum(weights)
+    want = sum(wi * _delta(t) for wi, t in zip(w, trees))
+    np.testing.assert_allclose(np.asarray(_delta(out)), np.asarray(want),
+                               atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 200),
+       st.lists(st.floats(0.1, 10.0), min_size=2, max_size=4))
+def test_product_aggregation_never_worse_than_factor(seed, weights):
+    """The anchored correction is a projection onto col(mean A), so the
+    implied delta's error against the true weighted-mean delta is <=
+    factor averaging's error, and non-pair leaves (the head) match the
+    plain weighted mean bitwise."""
+    trees = [_factor_tree(seed + i) for i in range(len(weights))]
+    fac = agg.aggregate_adapters(trees, weights, mode="factor")
+    pro = agg.aggregate_adapters(trees, weights, mode="product")
+    w = np.asarray(weights) / np.sum(weights)
+    want = sum(wi * _delta(t) for wi, t in zip(w, trees))
+    err_f = float(jnp.linalg.norm(_delta(fac) - want))
+    err_p = float(jnp.linalg.norm(_delta(pro) - want))
+    assert err_p <= err_f + 1e-5
+    np.testing.assert_array_equal(np.asarray(pro["head"]["w"]),
+                                  np.asarray(fac["head"]["w"]))
 
 
 @settings(max_examples=10, deadline=None)

@@ -34,6 +34,8 @@ from repro.models.split_api import (BertSplitModel, CausalLMSplitModel,
 
 GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
                       "bert_parity.json")
+GOLDEN_PRODUCT = os.path.join(os.path.dirname(__file__), "golden",
+                              "bert_parity_product.json")
 
 
 # ---------------------------------------------------------------------------
@@ -149,12 +151,12 @@ def test_bert_split_forward_bitwise_matches_legacy_ops():
                                           np.asarray(log_n))
 
 
-def test_bert_federation_matches_prerefactor_golden():
-    """Run-level parity: same seed + f32 reproduces the history recorded
-    from the pre-refactor code (atol 1e-9 ≈ bit-identical for f32)."""
-    gold = json.load(open(GOLDEN))
+def _assert_matches_golden(path):
+    gold = json.load(open(path))
     kw = dict(gold["config"])
-    kw["layers"] = kw.pop("bert_layers")        # golden predates the rename
+    if "bert_layers" in kw:
+        kw["layers"] = kw.pop("bert_layers")    # golden predates the rename
+    kw["poisoned"] = tuple(kw.get("poisoned", ()))
     fed = Federation(FedConfig(**kw), backend="batched")
     h = fed.run(gold["run"]["method"],
                 global_rounds=gold["run"]["global_rounds"],
@@ -171,6 +173,22 @@ def test_bert_federation_matches_prerefactor_golden():
             for l in jax.tree_util.tree_leaves(fed.last_theta)]
     np.testing.assert_allclose(sums, gold["theta_leaf_sums"], rtol=0,
                                atol=1e-7)
+
+
+def test_bert_federation_matches_prerefactor_golden():
+    """Run-level parity: same seed + f32 + the legacy factor-averaging
+    flag reproduces the history recorded from the pre-refactor code
+    (atol 1e-9 ≈ bit-identical for f32).  The golden's config carries
+    ``aggregate: "factor"`` — it was recorded under factor averaging,
+    and that path must stay bit-frozen under the product-space default."""
+    _assert_matches_golden(GOLDEN)
+
+
+def test_bert_federation_matches_product_golden():
+    """The product-space aggregation path is pinned by its own golden
+    (same config/seed as the legacy one, ``aggregate: "product"``), so
+    future refactors of the delta-tree fusion are bit-anchored too."""
+    _assert_matches_golden(GOLDEN_PRODUCT)
 
 
 # ---------------------------------------------------------------------------
