@@ -1,0 +1,122 @@
+"""Fault-tolerance study: screened vs unscreened accuracy under faults.
+
+Three arms of the tuned encoder federation (docs/robustness.md), all on
+the sync runtime so every arm sees the same dispatch schedule:
+
+- **clean**: no faults, no screening — the reference accuracy;
+- **unscreened**: a seeded ``FaultTrace`` corrupts every update from a
+  fixed faulty subset of clients, aggregation is untouched;
+- **screened**: the same trace (bit-identical fault schedule), with the
+  server-side screening stage + trust EMA enabled.
+
+Per faulty-fraction arm the study records the **screened gap** (clean
+minus screened — how much accuracy screening fails to rescue) and the
+**screened advantage** (screened minus unscreened — how much screening
+buys over doing nothing).  The headline metrics feed
+``benchmarks/check_regression.py``: the worst-case advantage is a CI
+floor and the worst-case gap a ceiling, so the robustness claim cannot
+silently rot.
+
+Corruption modes are chosen so each arm's screen has a sound majority
+to screen *against*: at 25% faulty the cohort median/mean-direction
+screens are honest-dominated, so NaN + sign-flip both apply; at 50%
+faulty only NaN injection is used (the finite screen needs no cohort
+statistics, so it works at any contamination level — direction/norm
+screens at half contamination would gate on a poisoned reference).
+
+Full mode (committed ``BENCH_fault_tolerance.json``) runs the gate
+horizon; ``--quick`` shortens it and drops to the single 25% arm for
+the CI smoke/gate.
+"""
+import os
+
+from benchmarks.common import emit, write_json
+from repro.federation.simulation import FedConfig, Federation
+from repro.federation.topology import make_fault_trace
+from repro.runtime import RuntimeConfig
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_fault_tolerance.json")
+
+# the tier-1 convergence gate's tuned bert-base stack (tests/
+# test_convergence.py), widened to 8 clients so the faulty subsets
+# below stay a cohort minority where the screens assume one
+BASE = dict(n_clients=8, n_edges=2, alpha=5.0, poisoned=(),
+            total_examples=800, probe_q=8, local_warmup_steps=2,
+            layers=4, t_rounds=1, batch_size=16, seed=0, seq_len=32,
+            class_sharpness=10.0, background_frac=0.0, num_classes=4,
+            use_channel=False, clip_norm=1.0, lr=5e-3, head_lr=0.4,
+            pooling="mean", server_opt="fedadam", server_lr=0.03)
+
+ROUNDS, STEPS = 14, 6
+
+#: (label, faulty_frac, corruption modes) — see the module docstring
+#: for why the mode set narrows as the contamination level rises.
+ARMS = (
+    ("frac25", 0.25, ("nan", "signflip")),
+    ("frac50", 0.50, ("nan",)),
+)
+
+
+def _final_acc(screen: bool, faults, rounds: int) -> float:
+    fed = Federation(FedConfig(**BASE, screen=screen), backend="batched")
+    h = fed.run("elsa", global_rounds=rounds, steps_per_round=STEPS,
+                runtime=RuntimeConfig(policy="sync", faults=faults))
+    return float(h["final_accuracy"])
+
+
+def run(quick: bool = False, write: bool = True, out: str = None):
+    rounds = 8 if quick else ROUNDS
+    arms = ARMS[:1] if quick else ARMS
+    clean = _final_acc(False, None, rounds)
+    emit("fault_tolerance_clean", 0.0, f"final={clean:.4f}")
+
+    results, gaps, advantages = {}, [], []
+    for label, frac, modes in arms:
+        faults = make_fault_trace(BASE["n_clients"], faulty_frac=frac,
+                                  corrupt_rate=1.0, corrupt_modes=modes,
+                                  seed=11)
+        screened = _final_acc(True, faults, rounds)
+        unscreened = _final_acc(False, faults, rounds)
+        gap = clean - screened
+        adv = screened - unscreened
+        results[label] = {
+            "faulty_frac": frac, "corrupt_modes": list(modes),
+            "n_faulty": len(faults.faulty),
+            "screened_accuracy": round(screened, 4),
+            "unscreened_accuracy": round(unscreened, 4),
+            "screened_gap": round(gap, 4),
+            "screened_advantage": round(adv, 4),
+        }
+        gaps.append(gap)
+        advantages.append(adv)
+        emit(f"fault_tolerance_{label}", 0.0,
+             f"screened={screened:.4f} unscreened={unscreened:.4f} "
+             f"gap={gap:.4f} adv={adv:.4f}")
+
+    payload = {
+        "config": {**{k: (list(v) if isinstance(v, tuple) else v)
+                      for k, v in BASE.items()},
+                   "rounds": rounds, "steps": STEPS, "quick": quick},
+        "clean_accuracy": round(clean, 4),
+        "arms": results,
+        # regression-gate metrics: the worst arm on each axis
+        "min_screened_advantage": round(min(advantages), 4),
+        "max_screened_gap": round(max(gaps), 4),
+    }
+    if write:
+        write_json(os.path.abspath(out or OUT_PATH), payload)
+    return payload
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="shortened horizon + single arm for the CI gate "
+                         "(no BENCH json unless --out is given)")
+    ap.add_argument("--out", default=None,
+                    help="write the bench JSON here (CI regression gate)")
+    args = ap.parse_args()
+    print(run(quick=args.quick, write=args.out is not None or not args.quick,
+              out=args.out))

@@ -30,7 +30,10 @@ class Gate(NamedTuple):
     metric: Callable[[dict], float]
     quick_floor: float      # absolute floor for --quick configs
     full_floor: float       # absolute floor for full configs
-    committed_frac: float   # fresh >= frac * committed (full mode only)
+    committed_frac: float   # fresh >= frac * committed (full mode only;
+                            # None skips — e.g. sign-indefinite metrics
+                            # where a fraction of the record is not a
+                            # meaningful floor)
     desc: str
 
 
@@ -54,12 +57,30 @@ GATES = (
               "horizon, so its floor only guards against falling back "
               "to chance-level accuracy; the full floor is the "
               "tier-1 gate's chance+0.15 bar)"),
+    Gate("fault_screening_advantage", "BENCH_fault_tolerance.json",
+         lambda p: p["min_screened_advantage"],
+         quick_floor=0.05, full_floor=0.10, committed_frac=0.5,
+         desc="worst-case accuracy bought by update screening over "
+              "unscreened aggregation under corrupted-client faults "
+              "(screening must keep beating doing nothing)"),
+    Gate("fault_screening_gap", "BENCH_fault_tolerance.json",
+         lambda p: -p["max_screened_gap"],
+         quick_floor=-0.10, full_floor=-0.05, committed_frac=None,
+         desc="negated worst-case screened-vs-fault-free accuracy gap "
+              "(screened runs must stay within 0.05 of the fault-free "
+              "reference in full mode, 0.10 on the quick horizon; the "
+              "metric is sign-indefinite so no committed-relative "
+              "floor applies)"),
 )
 
 
-def check(fresh_dir: str, quick: bool) -> int:
+def check(fresh_dir: str, quick: bool, only: str = None) -> int:
     failures = 0
-    for g in GATES:
+    gates = [g for g in GATES if only is None or only in g.name]
+    if not gates:
+        print(f"no gate matches --only {only!r}")
+        return 1
+    for g in gates:
         fresh_path = os.path.join(fresh_dir, g.file)
         if not os.path.exists(fresh_path):
             print(f"FAIL {g.name}: fresh record {fresh_path} missing "
@@ -70,7 +91,8 @@ def check(fresh_dir: str, quick: bool) -> int:
             value = g.metric(json.load(f))
         floor = g.quick_floor if quick else g.full_floor
         committed_path = os.path.join(ROOT, g.file)
-        if not quick and os.path.exists(committed_path):
+        if (not quick and g.committed_frac is not None
+                and os.path.exists(committed_path)):
             with open(committed_path) as f:
                 committed = g.metric(json.load(f))
             floor = max(floor, g.committed_frac * committed)
@@ -90,8 +112,11 @@ if __name__ == "__main__":
                     help="fresh records come from --quick bench configs: "
                          "use the relaxed absolute floors and skip "
                          "committed-relative checks")
+    ap.add_argument("--only", default=None,
+                    help="check only gates whose name contains this "
+                         "substring (for single-purpose CI jobs)")
     args = ap.parse_args()
-    n = check(args.fresh, args.quick)
+    n = check(args.fresh, args.quick, args.only)
     if n:
         print(f"{n} bench regression gate(s) failed")
         sys.exit(1)

@@ -15,6 +15,7 @@ BENCHES = [
     ("roofline", "benchmarks.bench_roofline"),
     ("fed_round", "benchmarks.bench_fed_round"),
     ("time_to_accuracy", "benchmarks.bench_time_to_accuracy"),
+    ("fault_tolerance", "benchmarks.bench_fault_tolerance"),
 ]
 
 

@@ -1,1 +1,5 @@
-from repro.checkpoint.checkpoint import save, restore, save_state, restore_state  # noqa: F401
+from repro.checkpoint.checkpoint import (save, restore, save_state,  # noqa: F401
+                                         restore_state, tree_equal)
+from repro.checkpoint.federation import (CheckpointConfig,  # noqa: F401
+                                         Checkpointer, latest_checkpoint,
+                                         list_checkpoints)

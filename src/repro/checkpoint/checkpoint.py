@@ -1,4 +1,23 @@
-"""Msgpack pytree checkpointing (atomic writes, dtype/shape preserved)."""
+"""Msgpack pytree checkpointing (atomic writes, dtype/shape preserved).
+
+Wire format (version 2):
+
+- array leaves (numpy / jax arrays and numpy scalars) are encoded as
+  ``{"__nd__": True, dtype, shape, data}`` with ``dtype.name`` so
+  extended types (bfloat16 via ml_dtypes) restore exactly;
+- python primitives (``None``/``bool``/``int``/``float``/``str``) pass
+  through msgpack natively — a float leaf comes back as a float, not a
+  0-d array, so run histories and metadata round-trip by value;
+- **tuples are preserved**: a tuple node is wrapped as
+  ``{"__tuple__": [items]}`` so ``restore`` returns the *same pytree
+  treedef* that was saved (a list-vs-tuple mismatch silently breaks
+  ``tree_map`` against live optimizer/parameter trees).
+
+``save_state``/``restore_state`` add a format marker + version and
+validate the payload on load: a truncated file, a stale pre-versioned
+checkpoint, or a payload missing its required sections fails with a
+clear ``ValueError`` instead of a downstream shape/KeyError.
+"""
 from __future__ import annotations
 
 import os
@@ -6,43 +25,62 @@ import tempfile
 from typing import Any, Dict
 
 import jax
-import jax.numpy as jnp
 import ml_dtypes  # noqa: F401 — registers bfloat16 with numpy
 import msgpack
 import numpy as np
 
+#: Format marker + version written by :func:`save_state`.
+STATE_FORMAT = "repro-state"
+STATE_VERSION = 2
+
+_ND = "__nd__"
+_TUPLE = "__tuple__"
+_PRIMITIVES = (bool, int, float, str)
+
 
 def _encode_leaf(x):
     arr = np.asarray(x)
+    if arr.dtype == object:
+        raise TypeError(f"cannot checkpoint object-dtype leaf {x!r}")
     # dtype.name keeps extended types (bfloat16 via ml_dtypes) restorable;
     # dtype.str would give opaque '|V2'
-    return {b"__nd__": True,
-            b"dtype": arr.dtype.name.encode(),
-            b"shape": list(arr.shape),
-            b"data": arr.tobytes()}
+    return {_ND: True,
+            "dtype": arr.dtype.name,
+            "shape": list(arr.shape),
+            "data": arr.tobytes()}
 
 
 def _is_encoded(obj):
-    return isinstance(obj, dict) and obj.get(b"__nd__", False)
+    return isinstance(obj, dict) and obj.get(_ND, False)
 
 
 def _decode_leaf(obj):
-    arr = np.frombuffer(obj[b"data"], dtype=np.dtype(obj[b"dtype"].decode()))
-    return jnp.asarray(arr.reshape(obj[b"shape"]))
+    # decode to numpy, NOT jnp: jnp.asarray would silently downcast
+    # float64/int64 leaves under jax's default x64-disabled config,
+    # breaking bit-exact restoration (trust/divergence stats are f64).
+    # jax ops convert numpy operands on use, so callers never notice.
+    arr = np.frombuffer(obj["data"], dtype=np.dtype(obj["dtype"]))
+    return arr.reshape(obj["shape"]).copy()
 
 
 def _to_wire(tree):
     if isinstance(tree, dict):
         return {k: _to_wire(v) for k, v in tree.items()}
-    if isinstance(tree, (list, tuple)):
+    if isinstance(tree, tuple):
+        return {_TUPLE: [_to_wire(v) for v in tree]}
+    if isinstance(tree, list):
         return [_to_wire(v) for v in tree]
+    if tree is None or isinstance(tree, _PRIMITIVES):
+        return tree
     return _encode_leaf(tree)
 
 
 def _from_wire(obj):
-    if _is_encoded(obj):
-        return _decode_leaf(obj)
     if isinstance(obj, dict):
+        if _is_encoded(obj):
+            return _decode_leaf(obj)
+        if _TUPLE in obj and len(obj) == 1:
+            return tuple(_from_wire(v) for v in obj[_TUPLE])
         return {(k.decode() if isinstance(k, bytes) else k): _from_wire(v)
                 for k, v in obj.items()}
     if isinstance(obj, list):
@@ -51,6 +89,8 @@ def _from_wire(obj):
 
 
 def save(path: str, tree: Any) -> None:
+    """Atomically write ``tree`` to ``path`` (write-temp + rename, so a
+    crash mid-write never leaves a truncated checkpoint in place)."""
     payload = msgpack.packb(_to_wire(tree), use_bin_type=True)
     d = os.path.dirname(os.path.abspath(path))
     os.makedirs(d, exist_ok=True)
@@ -65,15 +105,71 @@ def save(path: str, tree: Any) -> None:
 
 
 def restore(path: str) -> Any:
+    """Load a pytree written by :func:`save`.  Raises ``ValueError`` with
+    a clear message when the file is truncated or not a checkpoint."""
     with open(path, "rb") as f:
-        return _from_wire(msgpack.unpackb(f.read(), raw=True))
+        raw = f.read()
+    try:
+        wire = msgpack.unpackb(raw, raw=False, strict_map_key=False)
+    except Exception as e:                      # truncated / not msgpack
+        raise ValueError(
+            f"checkpoint {path!r} is corrupt or truncated "
+            f"({len(raw)} bytes): {e}") from e
+    return _from_wire(wire)
 
 
 def save_state(path: str, *, params=None, opt_state=None,
                step: int = 0, extra: Dict = None) -> None:
-    save(path, {"params": params, "opt_state": opt_state,
-                "step": np.asarray(step), "extra": extra or {}})
+    save(path, {"__format__": STATE_FORMAT,
+                "__version__": STATE_VERSION,
+                "params": params, "opt_state": opt_state,
+                "step": int(step), "extra": extra or {}})
 
 
 def restore_state(path: str):
-    return restore(path)
+    """Load + validate a :func:`save_state` checkpoint.
+
+    Raises ``ValueError`` when the file is truncated, predates the
+    format-version field (stale), comes from an incompatible version,
+    or is missing a required section — so a bad checkpoint fails here
+    with an actionable message rather than as a downstream
+    shape/KeyError.
+    """
+    state = restore(path)
+    if not isinstance(state, dict) or "__format__" not in state:
+        raise ValueError(
+            f"checkpoint {path!r} has no format marker — it is either "
+            "stale (written before format versioning) or not a "
+            "save_state checkpoint; re-save it with the current code")
+    if state["__format__"] != STATE_FORMAT:
+        raise ValueError(
+            f"checkpoint {path!r} has format {state['__format__']!r}, "
+            f"expected {STATE_FORMAT!r}")
+    if state["__version__"] != STATE_VERSION:
+        raise ValueError(
+            f"checkpoint {path!r} has format version "
+            f"{state['__version__']}, this code reads version "
+            f"{STATE_VERSION}; re-save it with the matching code")
+    missing = [k for k in ("params", "opt_state", "step", "extra")
+               if k not in state]
+    if missing:
+        raise ValueError(
+            f"checkpoint {path!r} is missing sections {missing} — "
+            "the payload was corrupted after the header")
+    return state
+
+
+def tree_equal(a, b) -> bool:
+    """Exact equality of two pytrees: same treedef (tuple-vs-list and
+    dict keys included), same leaf dtypes/shapes/bits."""
+    la, ta = jax.tree_util.tree_flatten(a)
+    lb, tb = jax.tree_util.tree_flatten(b)
+    if ta != tb or len(la) != len(lb):
+        return False
+    for x, y in zip(la, lb):
+        xa, ya = np.asarray(x), np.asarray(y)
+        if xa.dtype != ya.dtype or xa.shape != ya.shape:
+            return False
+        if xa.tobytes() != ya.tobytes():
+            return False
+    return True

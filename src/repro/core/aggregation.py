@@ -171,6 +171,29 @@ def aggregate_adapters(trees: Sequence, weights: Sequence[float],
     raise ValueError(f"unknown aggregation mode {mode!r}")
 
 
+def trimmed_mean(trees: Sequence, trim_frac: float = 0.25):
+    """Coordinate-wise trimmed mean across client trees.
+
+    Per coordinate, the ``int(trim_frac * n)`` smallest and largest
+    values are discarded and the rest averaged — the classic
+    Byzantine-robust estimator (Yin et al. 2018), used by the screening
+    stage as its small-cohort fallback.  Callers must pass finite trees
+    (NaNs sort to the top and would survive a one-sided trim).
+    """
+    n = len(trees)
+    if n == 0:
+        raise ValueError("trimmed_mean: no trees to aggregate")
+    if not 0.0 <= trim_frac < 0.5:
+        raise ValueError(f"trim_frac must be in [0, 0.5), got {trim_frac}")
+    k = min(int(trim_frac * n), (n - 1) // 2)
+
+    def f(*leaves):
+        x = jnp.sort(jnp.stack(leaves), axis=0)
+        return x[k:n - k].mean(axis=0).astype(leaves[0].dtype)
+
+    return jax.tree_util.tree_map(f, *trees)
+
+
 def mix_adapters(theta, update, w: float, mode: str = "factor"):
     """Asynchronous edge fold ``θ ← (1-w)·θ + w·update`` in the chosen
     space (the async scheduler's staleness-weighted mixing)."""

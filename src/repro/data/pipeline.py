@@ -39,6 +39,36 @@ def infinite_batches(tokens: np.ndarray, labels: np.ndarray,
         epoch += 1
 
 
+class CountingIterator:
+    """Iterator wrapper that counts draws, so a seeded stream can be
+    reproduced exactly after a restart: checkpoint the count, rebuild
+    the same seeded iterator in the new process, and
+    :meth:`fast_forward` to it.  Federation checkpointing
+    (:mod:`repro.checkpoint.federation`) relies on this for the
+    per-client batch streams."""
+
+    def __init__(self, it):
+        self._it = it
+        self.count = 0
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        out = next(self._it)
+        self.count += 1
+        return out
+
+    def fast_forward(self, count: int) -> None:
+        """Discard draws until ``self.count == count``."""
+        if count < self.count:
+            raise ValueError(
+                f"cannot rewind an iterator (at {self.count}, "
+                f"asked for {count})")
+        while self.count < count:
+            next(self)
+
+
 def pad_batch(tokens: np.ndarray, labels: np.ndarray, batch_size: int
               ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Pad a ragged (b, S) batch to ``batch_size`` rows.

@@ -155,6 +155,46 @@ def stack_ssops(ssops: Sequence[SSOP]) -> SSOP:
                 w_inv=field("w_inv"))
 
 
+@jax.jit
+def _screen_stats(stack, base, weights):
+    """Per-client delta statistics for the screening stage: for each
+    stacked client update vs the shared dispatch model ``base``, whether
+    every leaf is finite, the global delta norm, and the cosine against
+    the finite-masked weighted-mean delta of the cohort."""
+    deltas = jax.tree_util.tree_map(
+        lambda s, b: s.astype(jnp.float32) - b.astype(jnp.float32)[None],
+        stack, base)
+    leaves = jax.tree_util.tree_leaves(deltas)
+    axes = lambda l: tuple(range(1, l.ndim))
+    fin = jnp.ones(leaves[0].shape[0], bool)
+    for l in leaves:
+        fin = fin & jnp.all(jnp.isfinite(l), axis=axes(l))
+    sq = sum(jnp.sum(l * l, axis=axes(l)) for l in leaves)
+    norms = jnp.sqrt(sq)
+    # cohort mean delta over finite updates only (NaN leaves zeroed so
+    # one poisoned client can't poison the reference direction)
+    wmask = jnp.asarray(weights, jnp.float32) * fin
+    wsum = jnp.maximum(wmask.sum(), 1e-12)
+    mean = [jnp.einsum("n,n...->...",
+                       wmask, jnp.where(jnp.isfinite(l), l, 0.0)) / wsum
+            for l in leaves]
+    dot = sum(jnp.sum(l * m[None], axis=axes(l))
+              for l, m in zip(leaves, mean))
+    mnorm = jnp.sqrt(sum(jnp.sum(m * m) for m in mean))
+    cos = dot / jnp.maximum(norms * mnorm, 1e-12)
+    return fin, norms, cos
+
+
+def screen_stats(base, trees: Sequence, weights: Sequence[float]):
+    """Host-side wrapper of :func:`_screen_stats`: returns numpy
+    ``(finite bool[N], delta_norm f64[N], cos f64[N])`` for a cohort of
+    update trees against their dispatch model."""
+    fin, norms, cos = _screen_stats(stack_trees(trees), base,
+                                    jnp.asarray(list(weights), jnp.float32))
+    return (np.asarray(fin), np.asarray(norms, np.float64),
+            np.asarray(cos, np.float64))
+
+
 def _pad_axis1(arr: np.ndarray, pad: int) -> np.ndarray:
     """Append ``pad`` zero rows along the client axis (axis 1)."""
     z = np.zeros((arr.shape[0], pad) + arr.shape[2:], arr.dtype)

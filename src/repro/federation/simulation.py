@@ -105,10 +105,26 @@ class FedConfig:
     pooling: str = "cls"                 # encoder readout: "cls" | "mean"
     vocab_size: int = 0                  # >0: override the model vocab
                                          # (small-vocab synthetic tasks)
+    # -- update screening (docs/robustness.md); off by default and
+    #    bit-inert when disabled (golden-pinned) ------------------------
+    screen: bool = False                 # server-side update screening
+    screen_norm_k: float = 4.0           # reject ||delta|| > k * median
+    screen_cos_min: float = -0.5         # reject cos(delta, cohort mean)
+                                         # below this (sign-flip catch)
+    screen_trust_beta: float = 0.7       # trust-EMA retention
+    screen_trust_floor: float = 0.15     # exclude trust EMA below this
+    screen_min_cohort: int = 2           # fewer survivors -> trimmed mean
+    screen_trim_frac: float = 0.25       # fallback per-side trim fraction
 
     def __post_init__(self):
         if self.aggregate not in ("product", "factor"):
             raise ValueError(f"unknown aggregate mode {self.aggregate!r}")
+        if not 0.0 <= self.screen_trust_beta <= 1.0:
+            raise ValueError("screen_trust_beta must be in [0, 1], "
+                             f"got {self.screen_trust_beta}")
+        if not 0.0 <= self.screen_trim_frac < 0.5:
+            raise ValueError("screen_trim_frac must be in [0, 0.5), "
+                             f"got {self.screen_trim_frac}")
         if self.server_opt not in ("none", "fedadam", "fedams"):
             raise ValueError(f"unknown server_opt {self.server_opt!r}")
         if self.pooling not in ("cls", "mean"):
@@ -198,6 +214,19 @@ class Federation:
         self._engine: Optional[BatchedEngine] = None
         self._probe_fn = None
         self._eval_fn = None
+
+        # update screening (docs/robustness.md): the ledger always
+        # exists (cheap, checkpointed), the screening stage only runs
+        # when fed.screen is on — the off path stays golden bit-inert
+        from repro.core.screening import ScreeningConfig, TrustLedger
+        self.screening = ScreeningConfig(
+            norm_k=fed.screen_norm_k, cos_min=fed.screen_cos_min,
+            trust_floor=fed.screen_trust_floor,
+            min_cohort=fed.screen_min_cohort,
+            trim_frac=fed.screen_trim_frac)
+        self.trust_ledger = TrustLedger(fed.n_clients,
+                                        beta=fed.screen_trust_beta)
+        self.screen_log: List = []
 
     @property
     def engine(self) -> BatchedEngine:
@@ -441,6 +470,9 @@ class Federation:
             groups = {0: list(range(fed.n_clients))}
             div = np.zeros((fed.n_clients, fed.n_clients))
             trust = np.ones(fed.n_clients)
+        # screening starts from the clustering-time
+        # prediction-consistency trust as its EMA seed
+        self.trust_ledger.seed(trust)
         return groups, div, trust
 
     def _edge_round(self, active, theta_k, steps: int, iters, *,
@@ -468,17 +500,67 @@ class Federation:
         res = self.group_steps(all_active, thetas, steps, iters,
                                use_split=use_split, prox_anchor=prox_anchor,
                                per_client=True)
-        new_ks = {k: agg.aggregate_adapters(
-                      [res[n][0] for n in act],
-                      [self.client_weight(n) for n in act],
-                      mode=self.fed.aggregate)
+        new_ks = {k: self.screened_aggregate(
+                      act, [res[n][0] for n in act],
+                      [self.client_weight(n) for n in act], theta_ks[k])
                   for k, act in actives.items()}
         return new_ks, {n: res[n][1] for n in all_active}
+
+    # -- update screening (docs/robustness.md) -------------------------
+    def screened_aggregate(self, clients, trees, weights, base):
+        """Edge aggregation with the optional screening stage.
+
+        With ``FedConfig.screen`` off this IS
+        ``agg.aggregate_adapters(trees, weights)`` — same call, same
+        floats, golden bit-inert.  With it on, updates are screened
+        against ``base`` (the model they were dispatched from), the
+        trust EMA is updated from the verdicts, survivors are
+        trust-down-weighted, and an over-screened cohort falls back to
+        the trimmed mean (:mod:`repro.core.screening`).
+        """
+        if not self.fed.screen:
+            return agg.aggregate_adapters(trees, weights,
+                                          mode=self.fed.aggregate)
+        from repro.core.screening import screen_and_aggregate
+        from repro.federation.engine import screen_stats
+        out, report = screen_and_aggregate(
+            base, trees, weights, list(clients), self.trust_ledger,
+            self.screening, mode=self.fed.aggregate, stats_fn=screen_stats)
+        self.screen_log.append(report)
+        return out
+
+    def screen_cohort(self, clients, trees, weights, base):
+        """Screening without aggregation, for schedulers that combine
+        arrivals with an anchor term (the deadline policy): returns the
+        surviving ``(trees, weights)`` with trust-scaled weights.  A
+        fully-screened-out cohort returns empty lists — the caller's
+        anchor then carries the round."""
+        if not self.fed.screen:
+            return list(trees), list(weights)
+        from repro.core.screening import screen_updates
+        from repro.federation.engine import screen_stats
+        report = screen_updates(base, trees, weights, list(clients),
+                                self.trust_ledger, self.screening,
+                                stats_fn=screen_stats)
+        self.screen_log.append(report)
+        kept_trees = [trees[i] for i in report.kept]
+        kept_wts = [float(weights[i]) * self.trust_ledger.weight(clients[i])
+                    for i in report.kept]
+        return kept_trees, kept_wts
+
+    def fusion_trust(self, trust, members) -> float:
+        """Mean trust feeding an edge's cloud-fusion weight (Eq. 14):
+        the live screening EMA when screening is on, the static
+        clustering-time scores otherwise (bit-inert default)."""
+        if self.fed.screen:
+            return float(np.mean(self.trust_ledger.scores[list(members)]))
+        return float(np.mean(trust[list(members)]))
 
     # ------------------------------------------------------------------
     def run(self, method: str = "elsa", global_rounds: int = 10,
             steps_per_round: int = 4, eval_every: int = 1,
-            log: bool = False, runtime=None) -> Dict:
+            log: bool = False, runtime=None, checkpoint=None,
+            resume_from: Optional[str] = None) -> Dict:
         """Run the federation.
 
         ``runtime=None`` keeps the historical round-synchronous loop
@@ -488,36 +570,62 @@ class Federation:
         a simulated ``time`` axis and an event ``trace``; with
         ``policy="sync"`` and no churn the training math (and therefore
         the history) is identical to the historical loop.
+
+        ``checkpoint`` (a :class:`repro.checkpoint.CheckpointConfig`)
+        snapshots the full federation state on a rolling cadence;
+        ``resume_from`` (a checkpoint file or its directory) restores
+        one and continues — bit-identically to the uninterrupted run on
+        this loop and the sync runtime policy (docs/robustness.md).
         """
         if runtime is not None:
             from repro.runtime import EdgeRuntime
             return EdgeRuntime(self, runtime).run(
                 method, global_rounds=global_rounds,
                 steps_per_round=steps_per_round, eval_every=eval_every,
-                log=log)
+                log=log, checkpoint=checkpoint, resume_from=resume_from)
+        from repro.checkpoint import federation as fedckpt
+        from repro.data.pipeline import CountingIterator
         fed = self.fed
         rng = np.random.default_rng(fed.seed + 5)
         history = {"round": [], "accuracy": [], "loss": [], "delta": []}
 
         use_split_dyn = method not in ("elsa-fixed",)
-        groups, div, trust = self._assign_groups(method, rng)
-
-        theta = self.lora0
-        iters = {n: infinite_batches(self.data[n].tokens,
-                                     self.data[n].labels, fed.batch_size,
-                                     seed=fed.seed + 100 + n)
+        iters = {n: CountingIterator(
+                     infinite_batches(self.data[n].tokens,
+                                      self.data[n].labels, fed.batch_size,
+                                      seed=fed.seed + 100 + n))
                  for n in range(fed.n_clients)}
         server_opt = self.server_optimizer(method)
-        server_state = server_opt.init(theta) if server_opt else None
 
-        client_losses: Dict[int, List[float]] = {n: []
-                                                 for n in range(fed.n_clients)}
+        start_round, last_delta = 0, float("inf")
+        if resume_from is not None:
+            state = fedckpt.load_state(fedckpt.resolve(resume_from))
+            res = fedckpt.restore_run(self, state, method=method,
+                                      steps_per_round=steps_per_round,
+                                      iters=iters, rng=rng)
+            groups, div, trust = res.groups, res.div, res.trust
+            theta, server_state = res.theta, res.server_state
+            history, client_losses = res.history, res.client_losses
+            start_round, last_delta = res.round_idx + 1, res.delta
+        else:
+            groups, div, trust = self._assign_groups(method, rng)
+            theta = self.lora0
+            server_state = server_opt.init(theta) if server_opt else None
+            client_losses: Dict[int, List[float]] = {
+                n: [] for n in range(fed.n_clients)}
+        ckpt = fedckpt.Checkpointer(checkpoint) if checkpoint else None
+        if last_delta <= fed.xi:
+            # the checkpointed run had already converged (Eq. 16)
+            history["final_accuracy"] = history["accuracy"][-1]
+            history["client_losses"] = client_losses
+            self.last_theta = theta
+            return history
         # with a mesh, all edge groups dispatch as one sharded round per
         # edge-round index (devices see one big stacked cohort, not one
         # small dispatch per group); single-device keeps the historical
         # per-group dispatch so default runs stay bit-identical
         fuse = self.backend == "batched" and self.mesh is not None
-        for g in range(global_rounds):
+        for g in range(start_round, global_rounds):
             edge_thetas, edge_alphas, losses = {}, {}, []
             actives = {}
             for k, members in groups.items():
@@ -557,13 +665,13 @@ class Federation:
                         for n in active:
                             losses.append(loss_map[n])
                             client_losses[n].append(loss_map[n])
-                        theta_k = agg.aggregate_adapters(
-                            locals_, weights, mode=fed.aggregate)
+                        theta_k = self.screened_aggregate(
+                            active, locals_, weights, theta_k)
                     edge_thetas[k] = theta_k
             for k, active in actives.items():
                 edge_alphas[k] = agg.edge_weight(
                     agg.mean_pairwise_kld(div, active),
-                    float(np.mean(trust[active])))
+                    self.fusion_trust(trust, active))
 
             if method in ("elsa", "elsa-fixed", "elsa-nocluster"):
                 theta_new = agg.cloud_aggregate(edge_thetas, edge_alphas,
@@ -589,6 +697,14 @@ class Federation:
                 if log:
                     print(f"[{method}] round {g}: acc={acc:.4f} "
                           f"loss={np.mean(losses):.4f} delta={delta:.2e}")
+            if ckpt is not None and ckpt.due(g, global_rounds - 1, delta,
+                                            fed.xi):
+                ckpt.save(g, fedckpt.build_state(
+                    self, method=method, steps_per_round=steps_per_round,
+                    round_idx=g, theta=theta, server_state=server_state,
+                    rng=rng, iters=iters, history=history,
+                    client_losses=client_losses, groups=groups, div=div,
+                    trust=trust, delta=delta))
             if delta <= fed.xi:
                 break
         history["final_accuracy"] = history["accuracy"][-1]

@@ -2,11 +2,13 @@
 4 edge servers in an 8km x 8km area; B_n in [50, 100] Mbps), plus the
 client availability (churn) traces consumed by the event-driven runtime
 (:mod:`repro.runtime`): per-client alternating on/off renewal processes
-with exponential dwell times."""
+with exponential dwell times, and the :class:`FaultTrace` companion that
+injects crashes, dropped/duplicated uplinks, and corrupted adapter
+updates on a deterministic seeded schedule (docs/robustness.md)."""
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -128,3 +130,132 @@ def make_churn_trace(n_clients: int, horizon_s: float, *,
             t += off + float(rng.exponential(mean_on_s))
         offline.append(np.asarray(ivals, float).reshape(-1, 2))
     return ChurnTrace(offline, float(horizon_s))
+
+
+# ---------------------------------------------------------------------------
+# fault injection
+# ---------------------------------------------------------------------------
+
+FAULT_KINDS = ("crash", "drop", "dup", "corrupt")
+CORRUPT_MODES = ("nan", "inf", "signflip", "scale")
+
+
+@dataclasses.dataclass(frozen=True)
+class Fault:
+    """One injected fault on a single client dispatch.
+
+    ``kind``: ``"crash"`` (the client dies mid-round — its work is lost,
+    not paused; churn models the *paused* case), ``"drop"`` (the client
+    finishes but its uplink never reaches the edge), ``"dup"`` (the
+    uplink arrives twice), or ``"corrupt"`` (the update arrives
+    mangled, flavored by ``mode``: all-NaN, all-Inf, sign-flipped about
+    the dispatch model, or norm-scaled Byzantine
+    ``base + scale * (update - base)``).
+    ``at_frac``: for crashes, the fraction of the round's duration
+    survived before dying.
+    """
+    kind: str
+    mode: str = ""
+    scale: float = 10.0
+    at_frac: float = 0.5
+
+
+@dataclasses.dataclass
+class FaultTrace:
+    """Seeded per-dispatch fault schedule, the :class:`ChurnTrace`
+    companion for *misbehavior* rather than availability.
+
+    The fault hitting client ``n``'s ``i``-th dispatch is a pure
+    function of ``(seed, n, i)`` — sampled from a
+    ``np.random.SeedSequence(seed, spawn_key=(n, i))`` stream, not from
+    shared RNG state — so the schedule is identical across schedulers
+    and across screened/unscreened runs (the screening comparison in
+    ``bench_fault_tolerance`` sees the same faults on both arms).
+    Only clients in ``faulty`` misbehave (``None`` = everyone is
+    eligible); per dispatch, at most one fault fires, with kind
+    probabilities ``crash/drop/dup/corrupt_rate``.
+    """
+    n_clients: int
+    crash_rate: float = 0.0
+    drop_rate: float = 0.0
+    dup_rate: float = 0.0
+    corrupt_rate: float = 0.0
+    corrupt_modes: Tuple[str, ...] = ("nan", "signflip", "scale")
+    corrupt_scale: float = 10.0
+    faulty: Optional[Tuple[int, ...]] = None
+    seed: int = 0
+
+    def __post_init__(self):
+        rates = (self.crash_rate, self.drop_rate, self.dup_rate,
+                 self.corrupt_rate)
+        if any(r < 0 for r in rates) or sum(rates) > 1.0 + 1e-9:
+            raise ValueError(f"fault rates must be >= 0 and sum <= 1, "
+                             f"got {rates}")
+        bad = [m for m in self.corrupt_modes if m not in CORRUPT_MODES]
+        if bad:
+            raise ValueError(f"unknown corrupt modes {bad}; "
+                             f"expected among {CORRUPT_MODES}")
+        self._faulty_set = (None if self.faulty is None
+                            else frozenset(self.faulty))
+
+    def sample(self, client: int, dispatch_idx: int) -> Optional[Fault]:
+        """The fault (or None) hitting this client's i-th dispatch."""
+        if self._faulty_set is not None and client not in self._faulty_set:
+            return None
+        rng = np.random.default_rng(np.random.SeedSequence(
+            self.seed, spawn_key=(client, dispatch_idx)))
+        u = float(rng.random())
+        for kind, rate in (("crash", self.crash_rate),
+                           ("drop", self.drop_rate),
+                           ("dup", self.dup_rate),
+                           ("corrupt", self.corrupt_rate)):
+            if u < rate:
+                mode, scale = "", self.corrupt_scale
+                if kind == "corrupt":
+                    mode = self.corrupt_modes[
+                        int(rng.integers(len(self.corrupt_modes)))]
+                return Fault(kind, mode=mode, scale=scale,
+                             at_frac=float(rng.random()))
+            u -= rate
+        return None
+
+
+def make_fault_trace(n_clients: int, *, faulty_frac: float = 1.0,
+                     crash_rate: float = 0.0, drop_rate: float = 0.0,
+                     dup_rate: float = 0.0, corrupt_rate: float = 0.0,
+                     corrupt_modes: Tuple[str, ...] = ("nan", "signflip",
+                                                       "scale"),
+                     corrupt_scale: float = 10.0,
+                     seed: int = 0) -> FaultTrace:
+    """Pick a seeded ``faulty_frac`` subset of clients and give them the
+    requested per-dispatch fault rates (everyone else stays honest)."""
+    rng = np.random.default_rng(seed)
+    k = int(round(faulty_frac * n_clients))
+    faulty = tuple(sorted(int(x) for x in
+                          rng.choice(n_clients, k, replace=False)))
+    return FaultTrace(n_clients, crash_rate=crash_rate, drop_rate=drop_rate,
+                      dup_rate=dup_rate, corrupt_rate=corrupt_rate,
+                      corrupt_modes=tuple(corrupt_modes),
+                      corrupt_scale=corrupt_scale, faulty=faulty, seed=seed)
+
+
+def corrupt_update(base, update, fault: Fault):
+    """Apply a ``corrupt`` fault to an arriving adapter update.
+
+    ``base`` is the model the client was dispatched from: sign-flip and
+    Byzantine scaling act on the *delta* the client trained, which is
+    what a malicious participant controls.
+    """
+    import jax
+    import jax.numpy as jnp
+    t = jax.tree_util.tree_map
+    if fault.mode == "nan":
+        return t(lambda u: jnp.full_like(u, jnp.nan), update)
+    if fault.mode == "inf":
+        return t(lambda u: jnp.full_like(u, jnp.inf), update)
+    if fault.mode == "signflip":
+        return t(lambda b, u: (2.0 * b - u).astype(u.dtype), base, update)
+    if fault.mode == "scale":
+        return t(lambda b, u: (b + fault.scale * (u - b)).astype(u.dtype),
+                 base, update)
+    raise ValueError(f"not a corrupt fault: {fault!r}")

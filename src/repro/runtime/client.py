@@ -32,6 +32,11 @@ class ClientRuntimeState:
     base_round: int = 0           # edge round index at dispatch
     result: Optional[Any] = None  # (lora, loss) parked on completion
     rounds_run: int = 0
+    dispatches: int = 0           # fault-schedule index: counts every
+                                  # dispatch, crashed ones included (a
+                                  # crash never completes, so indexing
+                                  # faults by rounds_run would replay
+                                  # the same crash forever)
 
     def dispatch(self, t: float, finish: float, version: int,
                  round_idx: int) -> None:
@@ -43,6 +48,15 @@ class ClientRuntimeState:
         self.busy_until = finish
         self.base_version = version
         self.base_round = round_idx
+        self.result = None
+        self.dispatches += 1
+
+    def crash(self) -> None:
+        """Fault injection: the in-flight round is lost (not paused —
+        that's churn); the client idles and can be re-dispatched."""
+        assert self.state == TRAINING, \
+            f"client {self.client}: crash while {self.state}"
+        self.state = IDLE
         self.result = None
 
     def complete(self, result: Any) -> None:

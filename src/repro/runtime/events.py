@@ -19,6 +19,11 @@ CLOUD_AGG = "cloud_agg"        # cloud fuses edge models
 OFFLINE = "offline"            # client unavailable at dispatch time
 REJOIN = "rejoin"              # client back online, eligible again
 EVAL = "eval"                  # server-side evaluation snapshot
+# fault-injection kinds (see repro.federation.topology.FaultTrace)
+CRASH = "crash"                # client died mid-round, work lost
+DROP = "drop"                  # finished update never reached the edge
+DUP = "dup"                    # uplink delivered twice
+CORRUPT = "corrupt"            # update arrived mangled (NaN/flip/scale)
 
 
 @dataclasses.dataclass(frozen=True)

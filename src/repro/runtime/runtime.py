@@ -25,7 +25,7 @@ import dataclasses
 from typing import Dict, Optional
 
 from repro.core.comm_model import comm_config_from
-from repro.federation.topology import ChurnTrace, always_on
+from repro.federation.topology import ChurnTrace, FaultTrace, always_on
 from repro.runtime.cost import (DOWNLINK_RATIO_DEFAULT, EDGE_FLOPS_DEFAULT,
                                 ClientCostModel)
 from repro.runtime.trace import EventTrace
@@ -54,6 +54,9 @@ class RuntimeConfig:
     cloud_period_s: Optional[float] = None
     # availability model; None -> every client always on
     churn: Optional[ChurnTrace] = None
+    # fault-injection schedule (crash/drop/dup/corrupt per dispatch);
+    # None -> no faults (see repro.federation.topology.FaultTrace)
+    faults: Optional[FaultTrace] = None
     # cost-model knobs
     edge_flops: float = EDGE_FLOPS_DEFAULT
     backhaul_bytes_per_s: float = 1.25e9    # edge<->cloud (10 Gbps)
@@ -91,11 +94,21 @@ class EdgeRuntime:
 
     def run(self, method: str = "elsa", *, global_rounds: int = 10,
             steps_per_round: int = 4, eval_every: int = 1,
-            log: bool = False) -> Dict:
+            log: bool = False, checkpoint=None,
+            resume_from: Optional[str] = None) -> Dict:
         from repro.runtime.schedulers import SCHEDULERS
+        if (checkpoint is not None or resume_from is not None) \
+                and self.config.policy != "sync":
+            # deadline/async carry in-flight event-queue state across
+            # rounds; only the barrier-synchronous policy snapshots at a
+            # round boundary where the full state is in the checkpoint
+            raise ValueError("checkpoint/resume is supported on the "
+                             "'sync' runtime policy only, not "
+                             f"{self.config.policy!r}")
         scheduler = SCHEDULERS[self.config.policy](self)
         history = scheduler.run(method, global_rounds, steps_per_round,
-                                eval_every, log)
+                                eval_every, log, checkpoint=checkpoint,
+                                resume_from=resume_from)
         history["policy"] = self.config.policy
         history["trace"] = self.trace
         return history

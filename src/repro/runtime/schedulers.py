@@ -19,6 +19,15 @@ cloud aggregations happen on the simulated clock:
 - :class:`AsyncScheduler`: the edge folds each arrival into its model
   continuously with staleness-discounted mixing weights (FedAsync-style)
   and the cloud fuses edge models on a fixed period.
+
+All three inject faults from ``RuntimeConfig.faults`` (a seeded
+:class:`~repro.federation.topology.FaultTrace`): crashes lose in-flight
+work, drops lose the uplink after training, dups deliver it twice, and
+corruptions mangle the arriving adapter update — each sampled per
+dispatch, so the schedule is identical whether screening is on or off.
+The sync policy additionally supports full-state checkpoint/resume
+(:mod:`repro.checkpoint.federation`): resuming a killed run reproduces
+the uninterrupted history bit-identically (docs/robustness.md).
 """
 from __future__ import annotations
 
@@ -28,10 +37,12 @@ import jax
 import numpy as np
 
 from repro.core import aggregation as agg
-from repro.data.pipeline import infinite_batches
+from repro.data.pipeline import CountingIterator, infinite_batches
+from repro.federation.topology import corrupt_update
 from repro.runtime.client import ClientRuntimeState
-from repro.runtime.events import (ARRIVAL, CLOUD_AGG, DISPATCH, EDGE_AGG,
-                                  EVAL, OFFLINE, REJOIN, Event, EventQueue)
+from repro.runtime.events import (ARRIVAL, CLOUD_AGG, CORRUPT, CRASH,
+                                  DISPATCH, DROP, DUP, EDGE_AGG, EVAL,
+                                  OFFLINE, REJOIN, Event, EventQueue)
 
 ELSA_METHODS = ("elsa", "elsa-fixed", "elsa-nocluster")
 
@@ -54,18 +65,31 @@ class _SchedulerBase:
         self.rcfg = rt.config
 
     # -- shared setup ------------------------------------------------------
-    def _setup(self, method: str):
+    def _setup(self, method: str, assign: bool = True):
+        """Shared run preamble.  ``assign=False`` skips the expensive
+        clustering phase — a resumed run restores groups/div/trust (and
+        the channels the clustering built) from its checkpoint instead
+        of recomputing them."""
         fc = self.fc
         rng = np.random.default_rng(fc.seed + 5)
-        groups, div, trust = self.fed._assign_groups(method, rng)
-        iters = {n: infinite_batches(self.fed.data[n].tokens,
-                                     self.fed.data[n].labels, fc.batch_size,
-                                     seed=fc.seed + 100 + n)
+        groups = div = trust = None
+        if assign:
+            groups, div, trust = self.fed._assign_groups(method, rng)
+        iters = {n: CountingIterator(
+                     infinite_batches(self.fed.data[n].tokens,
+                                      self.fed.data[n].labels,
+                                      fc.batch_size,
+                                      seed=fc.seed + 100 + n))
                  for n in range(fc.n_clients)}
         server_opt = self.fed.server_optimizer(method)
         server_state = server_opt.init(self.fed.lora0) if server_opt \
             else None
         return rng, groups, div, trust, iters, server_opt, server_state
+
+    def _sample_fault(self, n: int, dispatch_idx: int):
+        faults = self.rcfg.faults
+        return faults.sample(n, dispatch_idx) if faults is not None \
+            else None
 
     def _round_seconds(self, n: int, use_split: bool, steps: int,
                        edge: int, round_idx: int) -> float:
@@ -93,7 +117,7 @@ class _SchedulerBase:
 
     def _edge_alpha(self, div, trust, members) -> float:
         return agg.edge_weight(agg.mean_pairwise_kld(div, members),
-                               float(np.mean(trust[members])))
+                               self.fed.fusion_trust(trust, members))
 
     def _record_eval(self, history, round_idx: int, t: float, theta,
                      losses, delta: float, log: bool, label: str) -> None:
@@ -132,22 +156,53 @@ class SyncScheduler(_SchedulerBase):
     """Reproduces ``Federation.run`` exactly (same dispatch sequence,
     same aggregation order) while assigning every round a simulated
     duration: each edge round ends when its slowest participant finishes
-    (churn pauses included); the cloud waits for the slowest edge."""
+    (churn pauses included); the cloud waits for the slowest edge.
+
+    Crash faults lose the client's round entirely — it contributes no
+    update, no loss, and the barrier does not wait for it (the edge
+    times it out); drops train and count toward the barrier but the
+    uplink is lost; dups fold the update twice; corruptions mangle it
+    in flight.  This is the only policy supporting checkpoint/resume:
+    at a global-round boundary the whole scheduler state is in
+    (theta, server_state, rng, iterator cursors, dispatch counters,
+    clock), which :mod:`repro.checkpoint.federation` serializes.
+    """
 
     def run(self, method: str, global_rounds: int, steps_per_round: int,
-            eval_every: int, log: bool) -> Dict:
+            eval_every: int, log: bool, checkpoint=None,
+            resume_from: Optional[str] = None) -> Dict:
+        from repro.checkpoint import federation as fedckpt
         fed, fc = self.fed, self.fc
         use_split_dyn = method not in ("elsa-fixed",)
         rng, groups, div, trust, iters, server_opt, server_state = \
-            self._setup(method)
+            self._setup(method, assign=resume_from is None)
         history = {"round": [], "time": [], "accuracy": [], "loss": [],
                    "delta": []}
         client_losses: Dict[int, List[float]] = {
             n: [] for n in range(fc.n_clients)}
         theta = fed.lora0
         t_global = 0.0
+        disp = {n: 0 for n in range(fc.n_clients)}  # fault cursors
+        start_round, last_delta = 0, float("inf")
 
-        for g in range(global_rounds):
+        if resume_from is not None:
+            state = fedckpt.load_state(fedckpt.resolve(resume_from))
+            res = fedckpt.restore_run(fed, state, method=method,
+                                      steps_per_round=steps_per_round,
+                                      iters=iters, rng=rng)
+            groups, div, trust = res.groups, res.div, res.trust
+            theta, server_state = res.theta, res.server_state
+            history, client_losses = res.history, res.client_losses
+            start_round, last_delta = res.round_idx + 1, res.delta
+            t_global = res.t_global
+            disp.update(res.dispatches)
+            if res.trace_records is not None:
+                self.trace.records = list(res.trace_records)
+            if last_delta <= fc.xi or t_global >= self.rcfg.max_sim_s:
+                return self._finish_history(history, theta, client_losses)
+        ckpt = fedckpt.Checkpointer(checkpoint) if checkpoint else None
+
+        for g in range(start_round, global_rounds):
             edge_thetas, edge_alphas, losses = {}, {}, []
             edge_done = {}
             for k, members in groups.items():
@@ -182,20 +237,46 @@ class SyncScheduler(_SchedulerBase):
                         use_split=use_split_dyn,
                         prox_anchor=theta if method == "fedprox" else None)
                     barrier = t_k
-                    for n in avail:
+                    upds, wts, senders = [], [], []
+                    for lora_n, w_n, n in zip(locals_, weights, avail):
+                        fault = self._sample_fault(n, disp[n])
+                        disp[n] += 1
                         dur = self._round_seconds(n, use_split_dyn,
                                                   steps_per_round, k, g)
                         f_n = self.churn.finish_time(n, t_k, dur)
+                        if fault is not None and fault.kind == "crash":
+                            # work lost, not paused: no update, no loss,
+                            # and the barrier does not wait for the body
+                            t_c = t_k + fault.at_frac * max(f_n - t_k, 0.0)
+                            self.trace.log(t_c, CRASH, n, k, round=g,
+                                           edge_round=r)
+                            continue
                         self.trace.log(f_n, ARRIVAL, n, k, round=g)
                         barrier = max(barrier, f_n)
-                    for n in avail:
                         losses.append(loss_map[n])
                         client_losses[n].append(loss_map[n])
-                    theta_k = agg.aggregate_adapters(locals_, weights,
-                                                     mode=fc.aggregate)
+                        if fault is not None and fault.kind == "drop":
+                            self.trace.log(f_n, DROP, n, k, round=g)
+                            continue
+                        if fault is not None and fault.kind == "corrupt":
+                            lora_n = corrupt_update(theta_k, lora_n, fault)
+                            self.trace.log(f_n, CORRUPT, n, k, round=g,
+                                           mode=fault.mode)
+                        upds.append(lora_n)
+                        wts.append(w_n)
+                        senders.append(n)
+                        if fault is not None and fault.kind == "dup":
+                            upds.append(lora_n)
+                            wts.append(w_n)
+                            senders.append(n)
+                            self.trace.log(f_n, DUP, n, k, round=g)
+                    if upds:
+                        theta_k = fed.screened_aggregate(senders, upds,
+                                                         wts, theta_k)
+                    # else: every uplink was lost; the edge keeps its model
                     t_k = barrier
                     self.trace.log(t_k, EDGE_AGG, -1, k, round=g,
-                                   n_updates=len(avail))
+                                   n_updates=len(upds))
                 edge_thetas[k] = theta_k
                 edge_alphas[k] = self._edge_alpha(div, trust, active)
                 edge_done[k] = t_k
@@ -209,6 +290,15 @@ class SyncScheduler(_SchedulerBase):
             if g % eval_every == 0 or g == global_rounds - 1:
                 self._record_eval(history, g, t_global, theta, losses,
                                   delta, log, f"sync/{method}")
+            if ckpt is not None and ckpt.due(g, global_rounds - 1, delta,
+                                             fc.xi):
+                ckpt.save(g, fedckpt.build_state(
+                    fed, method=method, steps_per_round=steps_per_round,
+                    round_idx=g, theta=theta, server_state=server_state,
+                    rng=rng, iters=iters, history=history,
+                    client_losses=client_losses, groups=groups, div=div,
+                    trust=trust, delta=delta, t_global=t_global,
+                    dispatches=disp, trace_records=self.trace.records))
             if delta <= fc.xi or t_global >= self.rcfg.max_sim_s:
                 break
         return self._finish_history(history, theta, client_losses)
@@ -226,10 +316,14 @@ class DeadlineScheduler(_SchedulerBase):
     it — with stragglers from earlier rounds discounted by
     ``straggler_discount**rounds_late``.  Clients still training at the
     deadline are simply not re-dispatched until they finish — their work
-    is never thrown away, it just arrives late."""
+    is never thrown away, it just arrives late (unless a fault crashes
+    it mid-flight or drops the uplink)."""
 
     def run(self, method: str, global_rounds: int, steps_per_round: int,
-            eval_every: int, log: bool) -> Dict:
+            eval_every: int, log: bool, checkpoint=None,
+            resume_from: Optional[str] = None) -> Dict:
+        # checkpoint/resume kwargs are rejected upstream by EdgeRuntime
+        # for non-sync policies; they reach here only as None
         fed, fc = self.fed, self.fc
         use_split_dyn = method not in ("elsa-fixed",)
         rng, groups, div, trust, iters, server_opt, server_state = \
@@ -305,12 +399,21 @@ class DeadlineScheduler(_SchedulerBase):
                     prox_anchor=(theta_anchor if method == "fedprox"
                                  else None))
                 for lora_n, n in zip(locals_, ready):
+                    fault = self._sample_fault(n, states[n].dispatches)
                     dur = self._round_seconds(n, use_split_dyn, steps, k,
                                               states[n].rounds_run)
                     f_n = self.churn.finish_time(n, t_k, dur)
                     states[n].dispatch(t_k, f_n, 0, r_idx)
-                    queue.push(Event(f_n, ARRIVAL, n, k,
-                                     payload=(lora_n, loss_map[n])))
+                    if fault is not None and fault.kind == "crash":
+                        t_c = t_k + fault.at_frac * max(f_n - t_k, 0.0)
+                        queue.push(Event(t_c, CRASH, n, k))
+                    else:
+                        if fault is not None and fault.kind == "corrupt":
+                            lora_n = corrupt_update(theta_k, lora_n,
+                                                    fault)
+                        queue.push(Event(f_n, ARRIVAL, n, k,
+                                         payload=(lora_n, loss_map[n],
+                                                  fault)))
                     self.trace.log(t_k, DISPATCH, n, k, round=g,
                                    edge_round=r_idx)
             if queue:
@@ -327,21 +430,43 @@ class DeadlineScheduler(_SchedulerBase):
             # nobody would report in the window — stretch it to the first
             # arrival so an edge round never aggregates nothing
             deadline = nxt.time
-        upds, wts, n_late, rep_w = [], [], 0, 0.0
+        upds, wts, senders, n_late, rep_w = [], [], [], 0, 0.0
         for ev in queue.drain_until(deadline):
             n = ev.client
+            if ev.kind == CRASH:
+                # in-flight work lost; the client idles and is eligible
+                # for re-dispatch from the next window's ready set
+                states[n].crash()
+                self.trace.log(ev.time, CRASH, n, k, round=g)
+                continue
             states[n].complete(ev.payload)
-            lora_n, loss_n = states[n].collect()
+            lora_n, loss_n, fault = states[n].collect()
             late = r_idx - states[n].base_round
+            losses.append(loss_n)
+            client_losses[n].append(loss_n)
+            self.trace.log(ev.time, ARRIVAL, n, k, round=g, late=late)
+            if fault is not None and fault.kind == "drop":
+                # trained (loss counted) but the uplink was lost: not
+                # folded, and its mass stays with the absent cohort
+                self.trace.log(ev.time, DROP, n, k, round=g)
+                continue
+            if fault is not None and fault.kind == "corrupt":
+                self.trace.log(ev.time, CORRUPT, n, k, round=g,
+                               mode=fault.mode)
             w = fed.client_weight(n) \
                 * (self.rcfg.straggler_discount ** late)
             upds.append(lora_n)
             wts.append(w)
+            senders.append(n)
             rep_w += fed.client_weight(n)
             n_late += int(late > 0)
-            losses.append(loss_n)
-            client_losses[n].append(loss_n)
-            self.trace.log(ev.time, ARRIVAL, n, k, round=g, late=late)
+            if fault is not None and fault.kind == "dup":
+                upds.append(lora_n)
+                wts.append(w)
+                senders.append(n)
+                self.trace.log(ev.time, DUP, n, k, round=g)
+        if self.fc.screen and upds:
+            upds, wts = fed.screen_cohort(senders, upds, wts, theta_k)
         # partial participation: the current edge model stands in for the
         # cohort mass that did NOT report this window, so a lone (possibly
         # stale, discounted) arrival perturbs theta_k proportionally
@@ -350,13 +475,15 @@ class DeadlineScheduler(_SchedulerBase):
         # arrivals are uniformly late
         absent_w = max(float(sum(fed.client_weight(n) for n in active))
                        - rep_w, 0.0)
-        if absent_w > 0:
+        if upds and absent_w > 0:
             theta_k = agg.aggregate_adapters([theta_k] + upds,
                                              [absent_w] + wts,
                                              mode=self.fc.aggregate)
-        else:
+        elif upds:
             theta_k = agg.aggregate_adapters(upds, wts,
                                              mode=self.fc.aggregate)
+        # else: every uplink this window was lost or screened out; the
+        # edge keeps its model
         self.trace.log(deadline, EDGE_AGG, -1, k, round=g,
                        n_updates=len(upds), n_stragglers=n_late)
         edge_round_idx[k] = r_idx + 1
@@ -384,7 +511,10 @@ class AsyncScheduler(_SchedulerBase):
     baseline to full participation)."""
 
     def run(self, method: str, global_rounds: int, steps_per_round: int,
-            eval_every: int, log: bool) -> Dict:
+            eval_every: int, log: bool, checkpoint=None,
+            resume_from: Optional[str] = None) -> Dict:
+        # checkpoint/resume kwargs are rejected upstream by EdgeRuntime
+        # for non-sync policies; they reach here only as None
         fed, fc = self.fed, self.fc
         use_split_dyn = method not in ("elsa-fixed",)
         rng, groups, div, trust, iters, server_opt, server_state = \
@@ -450,19 +580,58 @@ class AsyncScheduler(_SchedulerBase):
             if ev.kind == ARRIVAL:
                 n, k = ev.client, ev.edge
                 states[n].complete(ev.payload)
-                lora_n, loss_n = states[n].collect()
+                lora_n, loss_n, fault = states[n].collect()
                 s = states[n].staleness(version[k])
                 w = min(1.0, self.rcfg.async_alpha
                         / (1.0 + s) ** self.rcfg.staleness_decay)
-                edge_theta[k] = _mix(edge_theta[k], lora_n, w,
-                                     mode=fc.aggregate)
-                version[k] += 1
+                folds = 1
+                if fault is not None and fault.kind == "drop":
+                    folds = 0   # trained, but the uplink was lost
+                elif fault is not None and fault.kind == "dup":
+                    folds = 2   # delivered (and folded) twice
+                if fc.screen and folds:
+                    # no cohort to median against here — each arrival is
+                    # screened alone (finite check) and trust-discounted;
+                    # norm/direction screens need the batched cohorts of
+                    # the sync/deadline paths (docs/robustness.md)
+                    from repro.federation.engine import screen_stats
+                    fin, _, _ = screen_stats(edge_theta[k], [lora_n],
+                                             [1.0])
+                    ok = bool(fin[0])
+                    fed.trust_ledger.record(n, ok)
+                    score = float(fed.trust_ledger.scores[n])
+                    if not ok or score < fed.screening.trust_floor:
+                        folds = 0
+                    else:
+                        w = min(1.0, w * fed.trust_ledger.weight(n))
+                for _ in range(folds):
+                    edge_theta[k] = _mix(edge_theta[k], lora_n, w,
+                                         mode=fc.aggregate)
+                    version[k] += 1
                 window_losses.append(loss_n)
                 client_losses[n].append(loss_n)
                 self.trace.log(t, ARRIVAL, n, k, staleness=s,
                                weight=round(w, 6))
+                if fault is not None and fault.kind == "drop":
+                    self.trace.log(t, DROP, n, k)
+                elif fault is not None and fault.kind == "dup":
+                    self.trace.log(t, DUP, n, k)
+                elif fault is not None and fault.kind == "corrupt":
+                    self.trace.log(t, CORRUPT, n, k, mode=fault.mode)
                 if n not in cohort[k]:
                     pass   # dropped from the current cohort: stay idle
+                elif self.churn.is_online(n, t):
+                    self._dispatch([n], k, t, edge_theta[k], version[k],
+                                   states, queue)
+                else:
+                    queue.push(Event(self.churn.next_online(n, t),
+                                     REJOIN, n, k))
+            elif ev.kind == CRASH:
+                n, k = ev.client, ev.edge
+                states[n].crash()
+                self.trace.log(t, CRASH, n, k)
+                if n not in cohort[k]:
+                    pass   # crashed out of a stale cohort: stay idle
                 elif self.churn.is_online(n, t):
                     self._dispatch([n], k, t, edge_theta[k], version[k],
                                    states, queue)
@@ -530,12 +699,19 @@ class AsyncScheduler(_SchedulerBase):
             prox_anchor=(self._anchor if self._method == "fedprox"
                          else None))
         for lora_n, n in zip(locals_, ready):
+            fault = self._sample_fault(n, states[n].dispatches)
             dur = self._round_seconds(n, self._use_split_dyn, self._steps,
                                       k, states[n].rounds_run)
             f_n = self.churn.finish_time(n, t, dur)
             states[n].dispatch(t, f_n, version_k, states[n].rounds_run)
-            queue.push(Event(f_n, ARRIVAL, n, k,
-                             payload=(lora_n, loss_map[n])))
+            if fault is not None and fault.kind == "crash":
+                t_c = t + fault.at_frac * max(f_n - t, 0.0)
+                queue.push(Event(t_c, CRASH, n, k))
+            else:
+                if fault is not None and fault.kind == "corrupt":
+                    lora_n = corrupt_update(theta_k, lora_n, fault)
+                queue.push(Event(f_n, ARRIVAL, n, k,
+                                 payload=(lora_n, loss_map[n], fault)))
             self.trace.log(t, DISPATCH, n, k, version=version_k)
 
 

@@ -1,0 +1,281 @@
+"""Checkpoint wire format + full federation kill-and-resume.
+
+The wire-level tests pin the v2 msgpack format: tuples survive (the v1
+``_to_wire`` collapsed them into lists, silently re-typing pytree
+treedefs on restore — regression-tested here), every dtype restores
+bit-exactly (float64 trust vectors included — decoding through
+``jnp.asarray`` would silently downcast under jax's default x64-off
+config), and truncation/version-skew/missing-section failures raise
+clear ``ValueError``s instead of surfacing as msgpack internals.
+
+The federation tests assert the headline robustness guarantee: a sync
+run killed at a round boundary and resumed *in a fresh process* from
+its checkpoint finishes with bit-identical history, event trace, and
+final theta (docs/robustness.md).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
+import pytest
+
+import repro.checkpoint.federation as fedckpt
+from repro.checkpoint import (CheckpointConfig, Checkpointer,
+                              latest_checkpoint, restore, restore_state,
+                              save, save_state, tree_equal)
+from repro.data.pipeline import CountingIterator, infinite_batches
+from repro.federation.simulation import FedConfig, Federation
+from repro.runtime import RuntimeConfig
+
+SMALL = dict(n_clients=4, n_edges=2, alpha=5.0, poisoned=(),
+             total_examples=200, probe_q=8, local_warmup_steps=1,
+             layers=4, t_rounds=1, batch_size=8, seed=0, seq_len=16,
+             num_classes=4, use_channel=True, clip_norm=1.0)
+
+
+# ---------------------------------------------------------------------------
+# wire format
+# ---------------------------------------------------------------------------
+
+def test_tuples_survive_roundtrip(tmp_path):
+    """Regression: v1 ``_to_wire`` collapsed tuples into lists, so a
+    restored pytree had a different treedef than the saved one (trace
+    records and optimizer states carry tuples)."""
+    p = str(tmp_path / "t.msgpack")
+    obj = {"rec": (1.5, "arrival", 3, (("late", 0), ("round", 2))),
+           "nest": [(1, 2), [3, (4,)]], "empty": ()}
+    save(p, obj)
+    out = restore(p)
+    assert out == obj
+    assert isinstance(out["rec"], tuple)
+    assert isinstance(out["rec"][3][0], tuple)
+    assert isinstance(out["nest"][0], tuple) and out["empty"] == ()
+    assert isinstance(out["nest"][1], list)
+
+
+def test_every_dtype_restores_bit_exactly(tmp_path):
+    p = str(tmp_path / "d.msgpack")
+    rng = np.random.default_rng(0)
+    tree = {
+        "f32": jnp.asarray(rng.standard_normal((3, 4)), jnp.float32),
+        "f64": rng.standard_normal(5),                   # numpy float64
+        "i32": jnp.arange(6, dtype=jnp.int32),
+        "i64": np.arange(4, dtype=np.int64) * 10**12,
+        "bool": np.array([True, False, True]),
+        "bf16": jnp.asarray([1.5, -2.25, 3.0], jnp.bfloat16),
+        "scalar": 3.25, "none": None, "s": "theta", "flag": True,
+    }
+    save(p, tree)
+    out = restore(p)
+    assert tree_equal(tree, out)
+    assert out["f64"].dtype == np.float64         # NOT downcast to f32
+    assert out["i64"].dtype == np.int64
+    assert out["bf16"].dtype == ml_dtypes.bfloat16
+    assert out["scalar"] == 3.25 and out["none"] is None
+
+
+def test_object_dtype_rejected(tmp_path):
+    with pytest.raises(TypeError, match="object-dtype"):
+        save(str(tmp_path / "o.msgpack"), {"bad": np.array([{}, {}])})
+
+
+def test_save_is_atomic_no_partial_file(tmp_path):
+    p = str(tmp_path / "sub" / "a.msgpack")
+    os.makedirs(os.path.dirname(p))
+    with pytest.raises(TypeError):
+        save(p, {"bad": object()})
+    assert os.listdir(os.path.dirname(p)) == []   # no temp/partial left
+
+
+def test_restore_state_validation_errors(tmp_path):
+    params = {"w": jnp.ones((2, 2), jnp.float32)}
+    p = str(tmp_path / "s.msgpack")
+    save_state(p, params=params, opt_state=None, step=3)
+    out = restore_state(p)
+    assert out["step"] == 3 and out["opt_state"] is None
+    assert tree_equal(out["params"], params)
+
+    # truncation -> "corrupt or truncated", not a msgpack internal
+    raw = open(p, "rb").read()
+    t = str(tmp_path / "trunc.msgpack")
+    open(t, "wb").write(raw[:len(raw) // 2])
+    with pytest.raises(ValueError, match="corrupt or truncated"):
+        restore_state(t)
+
+    # a non-state payload -> missing format marker
+    q = str(tmp_path / "not_state.msgpack")
+    save(q, {"just": "data"})
+    with pytest.raises(ValueError, match="format"):
+        restore_state(q)
+
+    # version skew -> explicit version error
+    state = restore(p)
+    state["__version__"] = 99
+    v = str(tmp_path / "vers.msgpack")
+    save(v, state)
+    with pytest.raises(ValueError, match="version"):
+        restore_state(v)
+
+    # missing section
+    state = restore(p)
+    del state["params"]
+    m = str(tmp_path / "miss.msgpack")
+    save(m, state)
+    with pytest.raises(ValueError, match="params"):
+        restore_state(m)
+
+
+def test_counting_iterator_fast_forward():
+    def stream():
+        return infinite_batches(np.arange(40).reshape(10, 4),
+                                np.arange(10), 2, seed=3)
+    a = CountingIterator(stream())
+    for _ in range(7):
+        next(a)
+    b = CountingIterator(stream())
+    b.fast_forward(7)
+    assert a.count == b.count == 7
+    (ta, la), (tb, lb) = next(a), next(b)
+    np.testing.assert_array_equal(ta, tb)
+    np.testing.assert_array_equal(la, lb)
+    with pytest.raises(ValueError):
+        b.fast_forward(2)       # cannot rewind a forward-only stream
+
+
+# ---------------------------------------------------------------------------
+# rolling federation checkpoints
+# ---------------------------------------------------------------------------
+
+def test_checkpointer_rolls_and_prunes(tmp_path):
+    d = str(tmp_path)
+    ck = Checkpointer(CheckpointConfig(dir=d, every=2, keep=2))
+    assert ck.due(0, 9, 1.0, 0.0) and not ck.due(1, 9, 1.0, 0.0)
+    assert ck.due(9, 9, 1.0, 0.0)          # final round always snapshots
+    assert ck.due(3, 9, 0.0, 0.1)          # convergence stop too
+    for g in (0, 2, 4, 6):
+        ck.save(g, {"__format__": fedckpt.FORMAT,
+                    "__version__": fedckpt.VERSION, "round": g})
+    names = sorted(os.listdir(d))
+    assert names == ["ckpt_round_000004.msgpack",
+                     "ckpt_round_000006.msgpack"]
+    assert latest_checkpoint(d).endswith("000006.msgpack")
+    with pytest.raises(ValueError):
+        CheckpointConfig(dir=d, every=0)
+
+
+def test_load_state_rejects_foreign_and_skewed(tmp_path):
+    p = str(tmp_path / "x.msgpack")
+    save(p, {"no": "marker"})
+    with pytest.raises(ValueError, match="format marker"):
+        fedckpt.load_state(p)
+    save(p, {"__format__": "other-tool", "__version__": 1})
+    with pytest.raises(ValueError, match="other-tool"):
+        fedckpt.load_state(p)
+    save(p, {"__format__": fedckpt.FORMAT, "__version__": 99})
+    with pytest.raises(ValueError, match="version"):
+        fedckpt.load_state(p)
+    save(p, {"__format__": fedckpt.FORMAT,
+             "__version__": fedckpt.VERSION, "round": 0})
+    with pytest.raises(ValueError, match="missing sections"):
+        fedckpt.load_state(p)
+    with pytest.raises(ValueError, match="no federation checkpoints"):
+        fedckpt.resolve(str(tmp_path))
+
+
+# ---------------------------------------------------------------------------
+# resume = bit-identical continuation
+# ---------------------------------------------------------------------------
+
+def _run(fed_kw, *, runtime=None, **run_kw):
+    fed = Federation(FedConfig(**fed_kw))
+    h = fed.run("elsa", global_rounds=3, steps_per_round=2,
+                eval_every=1, runtime=runtime, **run_kw)
+    return fed, h
+
+
+def test_plain_loop_resume_is_bit_identical(tmp_path):
+    d = str(tmp_path / "ck")
+    fedA, hA = _run(SMALL, checkpoint=CheckpointConfig(dir=d, keep=9))
+    fedB, hB = _run(SMALL, resume_from=fedckpt.round_path(d, 0))
+    assert hA["accuracy"] == hB["accuracy"]
+    assert hA["loss"] == hB["loss"] and hA["delta"] == hB["delta"]
+    assert tree_equal(fedA.last_theta, fedB.last_theta)
+
+
+def test_sync_runtime_resume_matches_history_and_trace(tmp_path):
+    d = str(tmp_path / "ck")
+    rt = RuntimeConfig(policy="sync")
+    fedA, hA = _run(SMALL, runtime=rt,
+                    checkpoint=CheckpointConfig(dir=d, keep=9))
+    fedB, hB = _run(SMALL, runtime=RuntimeConfig(policy="sync"),
+                    resume_from=fedckpt.round_path(d, 1))
+    assert hA["accuracy"] == hB["accuracy"]
+    assert hA["time"] == hB["time"]
+    assert hA["trace"].records == hB["trace"].records
+    assert tree_equal(fedA.last_theta, fedB.last_theta)
+    # resuming a finished run is a no-op returning the final state
+    fedC, hC = _run(SMALL, runtime=RuntimeConfig(policy="sync"),
+                    resume_from=d)
+    assert hC["accuracy"] == hA["accuracy"]
+    assert tree_equal(fedC.last_theta, fedA.last_theta)
+
+
+def test_resume_rejects_config_and_method_drift(tmp_path):
+    d = str(tmp_path / "ck")
+    _run(SMALL, checkpoint=CheckpointConfig(dir=d, keep=9))
+    with pytest.raises(ValueError, match="config mismatch"):
+        _run(dict(SMALL, lr=0.123), resume_from=fedckpt.round_path(d, 0))
+    fed = Federation(FedConfig(**SMALL))
+    with pytest.raises(ValueError, match="method"):
+        fed.run("fedavg", global_rounds=3, steps_per_round=2,
+                resume_from=fedckpt.round_path(d, 0))
+    with pytest.raises(ValueError, match="sync"):
+        fed.run("elsa", global_rounds=3,
+                runtime=RuntimeConfig(policy="deadline"),
+                checkpoint=CheckpointConfig(dir=d))
+
+
+_RESUME_CHILD = """
+import json, sys
+from repro.federation.simulation import FedConfig, Federation
+from repro.runtime import RuntimeConfig
+from repro.checkpoint.checkpoint import save
+
+ckpt_path, out_path, kw_json = sys.argv[1], sys.argv[2], sys.argv[3]
+kw = json.loads(kw_json)
+kw["poisoned"] = tuple(kw["poisoned"])   # json has no tuples
+fed = Federation(FedConfig(**kw))
+h = fed.run("elsa", global_rounds=3, steps_per_round=2, eval_every=1,
+            runtime=RuntimeConfig(policy="sync"), resume_from=ckpt_path)
+save(out_path, {"accuracy": h["accuracy"], "time": h["time"],
+                "loss": h["loss"], "trace": h["trace"].records,
+                "theta": fed.last_theta})
+"""
+
+
+def test_kill_and_resume_in_fresh_process(tmp_path):
+    """The headline guarantee: checkpoint mid-training, resume in a
+    FRESH process (nothing shared but the checkpoint file), and the
+    final history, event trace, and theta match bit-for-bit."""
+    d = str(tmp_path / "ck")
+    fedA, hA = _run(SMALL, runtime=RuntimeConfig(policy="sync"),
+                    checkpoint=CheckpointConfig(dir=d, keep=9))
+    out = str(tmp_path / "resumed.msgpack")
+    env = dict(os.environ, JAX_PLATFORMS="cpu",
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    proc = subprocess.run(
+        [sys.executable, "-c", _RESUME_CHILD,
+         fedckpt.round_path(d, 1), out, json.dumps(SMALL)],
+        capture_output=True, text=True, env=env, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    res = restore(out)
+    assert res["accuracy"] == hA["accuracy"]
+    assert res["time"] == hA["time"]
+    assert res["loss"] == hA["loss"]
+    assert list(res["trace"]) == hA["trace"].records
+    assert tree_equal(res["theta"], fedA.last_theta)

@@ -1,0 +1,299 @@
+"""Fault injection + trust-gated update screening (docs/robustness.md).
+
+Three layers of coverage:
+
+1. Pure-core units: the seeded ``FaultTrace`` schedule, the corruption
+   operators, the coordinate-wise trimmed mean, and the trust EMA.
+2. Screening semantics on synthetic cohorts: each verdict
+   (nonfinite/norm/flip/low-trust) fires on the update built to trigger
+   it — including the sign-flip Byzantine update, whose delta *norm* is
+   indistinguishable from honest and only the direction screen catches.
+3. The acceptance gate: with >= 15% of clients shipping corrupted
+   updates on every dispatch, screened aggregation stays within 0.05
+   final accuracy of the fault-free baseline while the unscreened run
+   degrades strictly more (ISSUE acceptance; the committed
+   BENCH_fault_tolerance.json pins the same contrast for CI).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aggregation as agg
+from repro.core.screening import (FLIP, LOW_TRUST, NONFINITE, NORM, OK,
+                                  ScreeningConfig, TrustLedger,
+                                  screen_and_aggregate, screen_updates)
+from repro.federation.simulation import FedConfig, Federation
+from repro.federation.topology import (CORRUPT_MODES, FAULT_KINDS, Fault,
+                                       FaultTrace, corrupt_update,
+                                       make_fault_trace)
+from repro.runtime import RuntimeConfig
+
+# ---------------------------------------------------------------------------
+# fault schedule
+# ---------------------------------------------------------------------------
+
+
+def test_fault_trace_deterministic_and_stateless():
+    tr = FaultTrace(n_clients=8, crash_rate=0.2, drop_rate=0.1,
+                    dup_rate=0.1, corrupt_rate=0.2, seed=7)
+
+    def key(f):
+        return None if f is None else (f.kind, f.mode, f.at_frac)
+
+    # stateless: same (client, dispatch) -> same draw, any call order
+    a = [key(tr.sample(n, d)) for n in range(8) for d in range(20)]
+    rev = {(n, d): key(tr.sample(n, d))
+           for d in reversed(range(20)) for n in reversed(range(8))}
+    assert a == [rev[(n, d)] for n in range(8) for d in range(20)]
+    # and an identically-seeded trace reproduces the schedule
+    tr2 = FaultTrace(n_clients=8, crash_rate=0.2, drop_rate=0.1,
+                     dup_rate=0.1, corrupt_rate=0.2, seed=7)
+    assert a == [key(tr2.sample(n, d))
+                 for n in range(8) for d in range(20)]
+    kinds = [k[0] for k in a if k is not None]
+    assert set(kinds) <= set(FAULT_KINDS)
+    # rough rate sanity over 160 draws at 60% total fault probability
+    assert 0.3 <= len(kinds) / len(a) <= 0.9
+
+
+def test_fault_trace_respects_faulty_subset_and_rates():
+    tr = make_fault_trace(10, faulty_frac=0.3, corrupt_rate=1.0, seed=1)
+    assert len(tr.faulty) == 3
+    for n in range(10):
+        hits = [tr.sample(n, d) for d in range(5)]
+        if n in tr.faulty:
+            assert all(f is not None and f.kind == "corrupt" for f in hits)
+            assert all(f.mode in CORRUPT_MODES for f in hits)
+        else:
+            assert all(f is None for f in hits)
+    with pytest.raises(ValueError):
+        FaultTrace(n_clients=4, crash_rate=0.8, corrupt_rate=0.4)
+    with pytest.raises(ValueError):
+        FaultTrace(n_clients=4, corrupt_rate=0.1, corrupt_modes=("bogus",))
+
+
+def test_corrupt_update_semantics():
+    base = {"w": jnp.ones((3, 2), jnp.float32)}
+    upd = {"w": jnp.full((3, 2), 3.0, jnp.float32)}
+    out = corrupt_update(base, upd, Fault("corrupt", mode="nan"))
+    assert np.isnan(np.asarray(out["w"])).all()
+    out = corrupt_update(base, upd, Fault("corrupt", mode="inf"))
+    assert np.isinf(np.asarray(out["w"])).all()
+    # signflip mirrors the delta through the base: delta 2 -> -2
+    out = corrupt_update(base, upd, Fault("corrupt", mode="signflip"))
+    np.testing.assert_allclose(np.asarray(out["w"]), -1.0)
+    # scale stretches the delta: 1 + 10*2 = 21
+    out = corrupt_update(base, upd, Fault("corrupt", mode="scale",
+                                          scale=10.0))
+    np.testing.assert_allclose(np.asarray(out["w"]), 21.0)
+    assert out["w"].dtype == jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# trimmed mean + trust ledger
+# ---------------------------------------------------------------------------
+
+
+def test_trimmed_mean_resists_outliers():
+    trees = [{"w": jnp.full((2,), v, jnp.float32)}
+             for v in (1.0, 2.0, 3.0, 1000.0)]
+    out = agg.trimmed_mean(trees, trim_frac=0.25)
+    np.testing.assert_allclose(np.asarray(out["w"]), 2.5)  # mean of {2,3}
+    # one tree: trimming is a no-op mean
+    solo = agg.trimmed_mean(trees[:1], trim_frac=0.25)
+    np.testing.assert_allclose(np.asarray(solo["w"]), 1.0)
+    with pytest.raises(ValueError):
+        agg.trimmed_mean([], trim_frac=0.25)
+    with pytest.raises(ValueError):
+        agg.trimmed_mean(trees, trim_frac=0.5)
+
+
+def test_trust_ledger_ema_and_state_roundtrip():
+    led = TrustLedger(3, beta=0.5)
+    led.seed(np.array([1.0, 0.5, 0.0]))      # 0.0 clipped to 1e-6
+    assert led.scores[2] == pytest.approx(1e-6)
+    led.record(0, False)
+    assert led.scores[0] == pytest.approx(0.5)
+    led.record(0, True)
+    assert led.scores[0] == pytest.approx(0.75)
+    assert led.passes[0] == 1 and led.fails[0] == 1
+    led2 = TrustLedger(3)
+    led2.load_state(led.state())
+    np.testing.assert_array_equal(led2.scores, led.scores)
+    np.testing.assert_array_equal(led2.passes, led.passes)
+    with pytest.raises(ValueError):
+        TrustLedger(3, beta=1.5)
+
+
+# ---------------------------------------------------------------------------
+# screening semantics (synthetic stats, no model)
+# ---------------------------------------------------------------------------
+
+def _np_stats(base, trees, weights):
+    """Reference implementation of the screen statistics in numpy."""
+    deltas = [np.asarray(t["w"], np.float64) - np.asarray(base["w"],
+                                                          np.float64)
+              for t in trees]
+    fin = np.array([np.isfinite(d).all() for d in deltas])
+    norms = np.array([np.sqrt((d * d).sum()) if f else np.inf
+                      for d, f in zip(deltas, fin)])
+    w = np.asarray(weights, np.float64) * fin
+    mean = sum(wi * np.where(np.isfinite(d), d, 0.0)
+               for wi, d in zip(w, deltas)) / max(w.sum(), 1e-12)
+    cos = np.array([
+        (d * mean).sum() / max(norms[i] * np.sqrt((mean * mean).sum()),
+                               1e-12)
+        if fin[i] else 0.0 for i, d in enumerate(deltas)])
+    return fin, norms, cos
+
+
+def _tree(v):
+    return {"w": jnp.asarray(np.full(8, v, np.float32))}
+
+
+def test_screen_updates_verdicts_cover_every_failure_mode():
+    base = _tree(0.0)
+    honest = [_tree(1.0), _tree(1.1), _tree(0.9)]
+    bad_nan = {"w": jnp.full(8, jnp.nan)}
+    bad_norm = _tree(50.0)                    # >> norm_k * median
+    bad_flip = _tree(-1.0)                    # honest norm, cos == -1
+    trees = honest + [bad_nan, bad_norm, bad_flip]
+    led = TrustLedger(6)
+    rep = screen_updates(base, trees, [1.0] * 6, list(range(6)), led,
+                         ScreeningConfig(), stats_fn=_np_stats)
+    assert rep.verdicts == [OK, OK, OK, NONFINITE, NORM, FLIP]
+    assert rep.kept == [0, 1, 2]
+    assert rep.n_excluded == 3
+    # trust moved toward 0 for the screened-out, toward 1 for the honest
+    assert (led.scores[3:] < 1.0).all() and (led.scores[:3] == 1.0).all()
+
+
+def test_screen_updates_low_trust_exclusion_is_post_update():
+    base, led = _tree(0.0), TrustLedger(2, beta=0.5)
+    led.scores[:] = [1.0, 0.2]               # client 1 one fail from floor
+    rep = screen_updates(base, [_tree(1.0), _tree(1.0)], [1.0, 1.0],
+                         [0, 1], led, ScreeningConfig(trust_floor=0.15),
+                         stats_fn=_np_stats)
+    # client 1 passes the per-round checks (score EMA rises to 0.6) and
+    # stays; shrink the floor history further and it would drop
+    assert rep.verdicts == [OK, OK]
+    led.scores[1] = 0.05                     # deep distrust: even a pass
+    rep = screen_updates(base, [_tree(1.0), _tree(1.0)], [1.0, 1.0],
+                         [0, 1], led, ScreeningConfig(trust_floor=0.6),
+                         stats_fn=_np_stats)  # EMA 0.525 < floor 0.6
+    assert rep.verdicts == [OK, LOW_TRUST]
+    assert rep.kept == [0]
+
+
+def test_screen_and_aggregate_fallbacks():
+    base = _tree(0.0)
+    cfg = ScreeningConfig(min_cohort=2)
+    # all nonfinite -> keep the base model untouched
+    led = TrustLedger(2)
+    out, rep = screen_and_aggregate(
+        base, [{"w": jnp.full(8, jnp.nan)}] * 2, [1.0, 1.0], [0, 1],
+        led, cfg, mode="factor", stats_fn=_np_stats)
+    assert rep.fallback == "keep-base"
+    np.testing.assert_array_equal(np.asarray(out["w"]),
+                                  np.asarray(base["w"]))
+    # too few survivors (< min_cohort) -> trimmed mean over the finite
+    # updates, NOT a fragile two-client mean
+    led = TrustLedger(5)
+    trees = [_tree(1.0), _tree(1.2), {"w": jnp.full(8, jnp.nan)},
+             _tree(60.0), _tree(-1.0)]
+    out, rep = screen_and_aggregate(
+        base, trees, [1.0] * 5, [0, 1, 2, 3, 4], led,
+        ScreeningConfig(min_cohort=3), mode="factor", stats_fn=_np_stats)
+    assert rep.fallback == "trimmed"
+    # finite updates sort to [-1, 1, 1.2, 60]; one trimmed per side
+    np.testing.assert_allclose(np.asarray(out["w"]), 1.1, rtol=1e-6)
+    # healthy cohort -> plain trust-weighted aggregation, no fallback
+    led = TrustLedger(3)
+    out, rep = screen_and_aggregate(base, [_tree(1.0)] * 3, [1.0] * 3,
+                                    [0, 1, 2], led, cfg, mode="factor",
+                                    stats_fn=_np_stats)
+    assert rep.fallback == "" and rep.kept == [0, 1, 2]
+    np.testing.assert_allclose(np.asarray(out["w"]), 1.0, rtol=1e-6)
+
+
+def test_engine_screen_stats_matches_reference():
+    from repro.federation.engine import screen_stats
+    base = {"a": jnp.asarray(np.arange(6, dtype=np.float32).reshape(2, 3)),
+            "b": jnp.zeros(4, jnp.float32)}
+    rng = np.random.default_rng(0)
+
+    def perturb(scale, flip=False, nan=False):
+        out = {}
+        for k, v in base.items():
+            d = scale * rng.standard_normal(v.shape).astype(np.float32)
+            out[k] = jnp.asarray(np.asarray(v) + (-d if flip else d))
+        if nan:
+            out["a"] = out["a"].at[0, 0].set(jnp.nan)
+        return out
+
+    trees = [perturb(0.1), perturb(0.1), perturb(5.0), perturb(0.1,
+                                                              nan=True)]
+    fin, norms, cos = screen_stats(base, trees, [1.0] * 4)
+    assert fin.tolist() == [True, True, True, False]
+    assert norms[2] > 10 * max(norms[0], norms[1])
+    # a sign-flipped copy of an honest update scores cosine ~ -1 against
+    # a cohort mean dominated by honest mass
+    honest = perturb(0.1)
+    flipped = {k: jnp.asarray(2 * np.asarray(base[k]) - np.asarray(v))
+               for k, v in honest.items()}
+    fin, norms, cos = screen_stats(base, [honest, honest, flipped],
+                                   [1.0, 1.0, 1.0])
+    assert np.isclose(norms[2], norms[0], rtol=0.5)  # norm screen blind
+    assert cos[2] < -0.5 < cos[0]                    # direction screen not
+
+
+# ---------------------------------------------------------------------------
+# acceptance: screened federation survives Byzantine corruption
+# ---------------------------------------------------------------------------
+
+GATE = dict(n_clients=4, n_edges=2, alpha=5.0, poisoned=(),
+            total_examples=800, probe_q=8, local_warmup_steps=2,
+            layers=4, t_rounds=1, batch_size=16, seed=0, seq_len=32,
+            class_sharpness=10.0, background_frac=0.0, num_classes=4,
+            use_channel=False, clip_norm=1.0, lr=5e-3, head_lr=0.4,
+            pooling="mean", server_opt="fedadam", server_lr=0.03)
+ROUNDS, STEPS = 14, 6
+
+
+def _final_acc(screen: bool, faults) -> float:
+    fed = Federation(FedConfig(**GATE, screen=screen), backend="batched")
+    h = fed.run("elsa", global_rounds=ROUNDS, steps_per_round=STEPS,
+                runtime=RuntimeConfig(policy="sync", faults=faults))
+    return h["final_accuracy"]
+
+
+def test_screened_aggregation_survives_corrupted_clients():
+    """>= 15% of clients (1 of 4) ship corrupted updates on EVERY
+    dispatch.  Screened: within 0.05 of the fault-free run.  Unscreened:
+    strictly worse degradation (NaNs propagate straight into theta)."""
+    faults = make_fault_trace(GATE["n_clients"], faulty_frac=0.25,
+                              corrupt_rate=1.0, corrupt_modes=("nan",),
+                              seed=11)
+    assert len(faults.faulty) / GATE["n_clients"] >= 0.15
+    clean = _final_acc(False, None)
+    screened = _final_acc(True, faults)
+    unscreened = _final_acc(False, faults)
+    assert screened >= clean - 0.05, \
+        f"screened {screened:.3f} fell > 0.05 below fault-free {clean:.3f}"
+    assert (clean - unscreened) > (clean - screened), \
+        (f"unscreened {unscreened:.3f} should degrade more than "
+         f"screened {screened:.3f} (fault-free {clean:.3f})")
+
+
+def test_screening_off_is_bit_inert():
+    """screen=False issues the identical aggregation call: histories of
+    a default run and an explicit screen=False run match bit-for-bit
+    (the golden-pinned parity files cover the default path itself)."""
+    kw = dict(GATE, total_examples=200, seq_len=16)
+    h1 = Federation(FedConfig(**kw)).run("elsa", global_rounds=2,
+                                         steps_per_round=2)
+    h2 = Federation(FedConfig(**kw, screen=False)).run(
+        "elsa", global_rounds=2, steps_per_round=2)
+    assert h1["accuracy"] == h2["accuracy"]
+    assert h1["loss"] == h2["loss"]
+    assert h1["delta"] == h2["delta"]

@@ -209,3 +209,60 @@ def test_kl_nonnegative(seed):
         rng.standard_normal((40, 6)) * 2 + 1, jnp.float32))
     assert float(kl_gaussian(a, b)) >= -1e-4
     assert float(sym_kl(a, b)) >= -1e-4
+
+
+# ---------------------------------------------------------------------------
+# checkpoint wire format: arbitrary mixed-dtype pytrees roundtrip exactly
+# ---------------------------------------------------------------------------
+
+_DTYPES = (np.float32, np.int32, np.bool_, "bfloat16", np.float64,
+           np.int64)
+
+
+def _leaf_strategy():
+    def build(draw_tuple):
+        dt, shape, seed = draw_tuple
+        rng = np.random.default_rng(seed)
+        if dt is np.bool_:
+            return rng.random(shape) > 0.5
+        if dt in (np.int32, np.int64):
+            return rng.integers(-1000, 1000, shape).astype(dt)
+        if dt == "bfloat16":
+            import ml_dtypes
+            return rng.standard_normal(shape).astype(ml_dtypes.bfloat16)
+        return rng.standard_normal(shape).astype(dt)
+
+    return st.tuples(
+        st.sampled_from(_DTYPES),
+        st.tuples(st.integers(0, 3), st.integers(1, 4)),
+        st.integers(0, 2 ** 31 - 1),
+    ).map(build)
+
+
+def _tree_strategy():
+    scalar = st.one_of(st.none(), st.booleans(),
+                       st.integers(-10**6, 10**6),
+                       st.floats(allow_nan=False, allow_infinity=False,
+                                 width=64),
+                       st.text(max_size=8))
+    return st.recursive(
+        st.one_of(_leaf_strategy(), scalar),
+        lambda kids: st.one_of(
+            st.lists(kids, max_size=3),
+            st.lists(kids, max_size=3).map(tuple),
+            st.dictionaries(st.text(alphabet="abcxyz", min_size=1,
+                                    max_size=6), kids, max_size=3)),
+        max_leaves=12)
+
+
+@settings(max_examples=25, deadline=None)
+@given(tree=_tree_strategy())
+def test_checkpoint_roundtrip_mixed_dtype_trees(tmp_path_factory, tree):
+    """save -> restore is the identity on nested dict/list/tuple trees
+    over f32/f64/i32/i64/bool/bfloat16 leaves: same treedef (tuples stay
+    tuples), same dtypes, same bits."""
+    from repro.checkpoint import restore, save, tree_equal
+    p = str(tmp_path_factory.mktemp("ckpt") / "t.msgpack")
+    save(p, tree)
+    out = restore(p)
+    assert tree_equal(tree, out)

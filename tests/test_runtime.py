@@ -236,3 +236,64 @@ def test_async_full_methods_still_dispatch_everyone():
     first_agg = tr.of_kind("cloud_agg")[0][0]
     dispatched = {r[2] for r in tr.of_kind("dispatch") if r[0] < first_agg}
     assert dispatched == set(range(SMALL_KW["n_clients"]))
+
+
+# ---------------------------------------------------------------------------
+# churn-trace edge cases
+# ---------------------------------------------------------------------------
+
+def test_make_churn_trace_frac_extremes():
+    """churn_frac 0 -> nobody cycles; churn_frac 1 -> the cycling set is
+    the whole population (some clients may still draw a first on-dwell
+    past the horizon and show zero outages)."""
+    none = make_churn_trace(6, 500.0, churn_frac=0.0, seed=2)
+    assert all(iv.size == 0 for iv in none.offline)
+    assert all(none.is_online(n, t) for n in range(6)
+               for t in (0.0, 250.0, 1e6))
+    everyone = make_churn_trace(6, 2000.0, mean_on_s=20.0, mean_off_s=10.0,
+                                churn_frac=1.0, seed=2)
+    assert sum(iv.size > 0 for iv in everyone.offline) == 6
+    # intervals are sorted, non-overlapping, and start inside the horizon
+    for iv in everyone.offline:
+        assert (iv[:, 0] < 2000.0).all()
+        assert (iv[:, 1] > iv[:, 0]).all()
+        assert (iv[1:, 0] >= iv[:-1, 1]).all()
+
+
+def test_churn_interval_boundaries_are_half_open():
+    """[start, end) semantics exactly at the endpoints, including an
+    interval that ends exactly at the horizon."""
+    tr = ChurnTrace([np.array([[5.0, 10.0]])], horizon_s=10.0)
+    assert tr.is_online(0, 4.999999)
+    assert not tr.is_online(0, 5.0)          # start is inclusive
+    assert not tr.is_online(0, 9.999999)
+    assert tr.is_online(0, 10.0)             # end is exclusive == horizon
+    assert tr.next_online(0, 5.0) == 10.0
+    assert tr.next_online(0, 10.0) == 10.0   # already online: no-op
+    # work dispatched exactly at the outage start waits it out entirely
+    assert tr.finish_time(0, 5.0, 1.0) == pytest.approx(11.0)
+
+
+def test_churn_outage_straddling_horizon_is_honored():
+    """An interval generated before but ending after ``horizon_s`` keeps
+    pausing work past the horizon — always-on-beyond-horizon applies to
+    clients with no remaining intervals, not mid-outage ones."""
+    tr = ChurnTrace([np.array([[8.0, 15.0]])], horizon_s=10.0)
+    assert not tr.is_online(0, 12.0)
+    assert tr.next_online(0, 12.0) == 15.0
+    assert tr.finish_time(0, 7.0, 2.0) == pytest.approx(16.0)
+
+
+def test_churn_all_offline_beyond_horizon_recovers():
+    """Once every trace interval is exhausted, clients are always-on:
+    the sync barrier can always make progress after the horizon."""
+    tr = ChurnTrace([np.array([[0.0, 30.0]]),
+                     np.array([[0.0, 40.0]])], horizon_s=30.0)
+    assert not tr.is_online(0, 10.0) and not tr.is_online(1, 10.0)
+    assert tr.next_online(0, 10.0) == 30.0
+    assert tr.next_online(1, 35.0) == 40.0
+    assert tr.is_online(0, 50.0) and tr.is_online(1, 50.0)
+    assert tr.finish_time(0, 50.0, 3.0) == pytest.approx(53.0)
+    # a fully-offline-at-dispatch cohort still finishes: work starts at
+    # the first rejoin
+    assert tr.finish_time(1, 0.0, 2.0) == pytest.approx(42.0)
