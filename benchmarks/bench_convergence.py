@@ -21,7 +21,7 @@ keeps every axis.
 """
 import os
 
-from benchmarks.common import emit, write_json
+from benchmarks.common import bench_telemetry, emit, write_json
 from repro.federation.simulation import FedConfig, Federation
 
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
@@ -66,24 +66,29 @@ def _accuracy(kw: dict, rounds: int, steps: int):
 
 def run(quick: bool = False, write: bool = True, out: str = None):
     results, margins = {}, []
-    for family, (overrides, rounds, steps, chance) in FAMILIES.items():
-        if quick:
-            rounds = max(rounds // 2 - 2, 4) if family == "bert-base" \
-                else 6
-        fam = {"chance": chance, "rounds": rounds, "steps": steps,
-               "variants": {}}
-        for label, stack in VARIANTS:
-            final, best = _accuracy({**BASE, **overrides, **stack},
-                                    rounds, steps)
-            fam["variants"][label] = {"final_accuracy": round(final, 4),
-                                      "best_accuracy": round(best, 4)}
-            emit(f"convergence_{family}_{label}", 0.0,
-                 f"final={final:.4f} best={best:.4f} chance={chance:.4f}")
-        tuned = max(fam["variants"]["tuned"]["final_accuracy"],
-                    fam["variants"]["fedadam"]["final_accuracy"])
-        fam["tuned_margin_over_chance"] = round(tuned - chance, 4)
-        margins.append(fam["tuned_margin_over_chance"])
-        results[family] = fam
+    out_path = os.path.abspath(out or OUT_PATH)
+    with bench_telemetry("convergence", out_path if write else None,
+                         quick=quick):
+        for family, (overrides, rounds, steps, chance) in FAMILIES.items():
+            if quick:
+                rounds = max(rounds // 2 - 2, 4) if family == "bert-base" \
+                    else 6
+            fam = {"chance": chance, "rounds": rounds, "steps": steps,
+                   "variants": {}}
+            for label, stack in VARIANTS:
+                final, best = _accuracy({**BASE, **overrides, **stack},
+                                        rounds, steps)
+                fam["variants"][label] = {
+                    "final_accuracy": round(final, 4),
+                    "best_accuracy": round(best, 4)}
+                emit(f"convergence_{family}_{label}", 0.0,
+                     f"final={final:.4f} best={best:.4f} "
+                     f"chance={chance:.4f}")
+            tuned = max(fam["variants"]["tuned"]["final_accuracy"],
+                        fam["variants"]["fedadam"]["final_accuracy"])
+            fam["tuned_margin_over_chance"] = round(tuned - chance, 4)
+            margins.append(fam["tuned_margin_over_chance"])
+            results[family] = fam
     payload = {
         "config": {**{k: (list(v) if isinstance(v, tuple) else v)
                       for k, v in BASE.items()}, "quick": quick},
@@ -98,7 +103,7 @@ def run(quick: bool = False, write: bool = True, out: str = None):
             for f, r in results.items()},
     }
     if write:
-        write_json(os.path.abspath(out or OUT_PATH), payload)
+        write_json(out_path, payload)
     return payload
 
 

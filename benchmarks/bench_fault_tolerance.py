@@ -30,7 +30,7 @@ the CI smoke/gate.
 """
 import os
 
-from benchmarks.common import emit, write_json
+from benchmarks.common import bench_telemetry, emit, write_json
 from repro.federation.simulation import FedConfig, Federation
 from repro.federation.topology import make_fault_trace
 from repro.runtime import RuntimeConfig
@@ -68,31 +68,34 @@ def _final_acc(screen: bool, faults, rounds: int) -> float:
 def run(quick: bool = False, write: bool = True, out: str = None):
     rounds = 8 if quick else ROUNDS
     arms = ARMS[:1] if quick else ARMS
-    clean = _final_acc(False, None, rounds)
-    emit("fault_tolerance_clean", 0.0, f"final={clean:.4f}")
+    out_path = os.path.abspath(out or OUT_PATH)
+    with bench_telemetry("fault_tolerance", out_path if write else None,
+                         rounds=rounds, quick=quick):
+        clean = _final_acc(False, None, rounds)
+        emit("fault_tolerance_clean", 0.0, f"final={clean:.4f}")
 
-    results, gaps, advantages = {}, [], []
-    for label, frac, modes in arms:
-        faults = make_fault_trace(BASE["n_clients"], faulty_frac=frac,
-                                  corrupt_rate=1.0, corrupt_modes=modes,
-                                  seed=11)
-        screened = _final_acc(True, faults, rounds)
-        unscreened = _final_acc(False, faults, rounds)
-        gap = clean - screened
-        adv = screened - unscreened
-        results[label] = {
-            "faulty_frac": frac, "corrupt_modes": list(modes),
-            "n_faulty": len(faults.faulty),
-            "screened_accuracy": round(screened, 4),
-            "unscreened_accuracy": round(unscreened, 4),
-            "screened_gap": round(gap, 4),
-            "screened_advantage": round(adv, 4),
-        }
-        gaps.append(gap)
-        advantages.append(adv)
-        emit(f"fault_tolerance_{label}", 0.0,
-             f"screened={screened:.4f} unscreened={unscreened:.4f} "
-             f"gap={gap:.4f} adv={adv:.4f}")
+        results, gaps, advantages = {}, [], []
+        for label, frac, modes in arms:
+            faults = make_fault_trace(BASE["n_clients"], faulty_frac=frac,
+                                      corrupt_rate=1.0,
+                                      corrupt_modes=modes, seed=11)
+            screened = _final_acc(True, faults, rounds)
+            unscreened = _final_acc(False, faults, rounds)
+            gap = clean - screened
+            adv = screened - unscreened
+            results[label] = {
+                "faulty_frac": frac, "corrupt_modes": list(modes),
+                "n_faulty": len(faults.faulty),
+                "screened_accuracy": round(screened, 4),
+                "unscreened_accuracy": round(unscreened, 4),
+                "screened_gap": round(gap, 4),
+                "screened_advantage": round(adv, 4),
+            }
+            gaps.append(gap)
+            advantages.append(adv)
+            emit(f"fault_tolerance_{label}", 0.0,
+                 f"screened={screened:.4f} unscreened={unscreened:.4f} "
+                 f"gap={gap:.4f} adv={adv:.4f}")
 
     payload = {
         "config": {**{k: (list(v) if isinstance(v, tuple) else v)
@@ -105,7 +108,7 @@ def run(quick: bool = False, write: bool = True, out: str = None):
         "max_screened_gap": round(max(gaps), 4),
     }
     if write:
-        write_json(os.path.abspath(out or OUT_PATH), payload)
+        write_json(out_path, payload)
     return payload
 
 

@@ -17,9 +17,10 @@ Writes ``BENCH_fed_round.json`` at the repo root via
 ``benchmarks.common.write_json`` and prints the usual CSV line.
 """
 import os
+import time
 
-from benchmarks.common import (emit, fed_round_config, time_fed_round,
-                               write_json)
+from benchmarks.common import (bench_telemetry, emit, fed_round_config,
+                               time_fed_round, write_json)
 from repro.federation.simulation import FedConfig, Federation
 
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
@@ -31,12 +32,34 @@ def _time_round(backend: str, steps: int, cfg_kw: dict) -> float:
         lambda: Federation(FedConfig(**cfg_kw), backend=backend), steps)
 
 
+def _time_round_telemetry(steps: int, cfg_kw: dict, json_path: str,
+                          clients: int, model: str) -> float:
+    """The batched round again, with telemetry collecting: the
+    disabled/enabled wall-time ratio is the overhead gate's metric, and
+    the collected JSONL ships beside the BENCH json."""
+    fed = Federation(FedConfig(**cfg_kw), backend="batched")
+    fed.run("fedavg", global_rounds=1, steps_per_round=steps)   # warmup
+    with bench_telemetry("fed_round", json_path, backend="batched",
+                         clients=clients, model=model, steps=steps):
+        t0 = time.perf_counter()
+        fed.run("fedavg", global_rounds=1, steps_per_round=steps)
+        return time.perf_counter() - t0
+
+
 def run(steps: int = 4, clients: int = 20, model: str = "bert-base",
-        write: bool = True, out: str = None):
+        write: bool = True, out: str = None, quick: bool = False):
+    if quick:
+        # CI smoke config; never clobber the committed full-run record
+        steps, clients = 2, 6
+        write = write and out is not None
     cfg_kw = fed_round_config(clients, model, total_examples=2000)
     t_batched = _time_round("batched", steps, cfg_kw)
     t_reference = _time_round("reference", steps, cfg_kw)
     speedup = t_reference / t_batched
+    out_path = os.path.abspath(out or OUT_PATH)
+    t_telemetry = _time_round_telemetry(
+        steps, cfg_kw, out_path if write else None, clients, model)
+    telemetry_ratio = t_batched / t_telemetry
     payload = {
         # labels come from the shared config so the record can't drift
         # from the measured workload
@@ -48,12 +71,18 @@ def run(steps: int = 4, clients: int = 20, model: str = "bert-base",
         "reference_s": round(t_reference, 3),
         "batched_s": round(t_batched, 3),
         "speedup": round(speedup, 2),
+        "telemetry_s": round(t_telemetry, 3),
+        # disabled/enabled round time: < 1 means telemetry costs time;
+        # the regression gate floors this at 0.95
+        "telemetry_ratio": round(telemetry_ratio, 3),
     }
     if write:
-        write_json(os.path.abspath(out or OUT_PATH), payload)
+        write_json(out_path, payload)
     emit("fed_round_reference", t_reference * 1e6,
          f"{model}:{clients}x{steps}steps")
     emit("fed_round_batched", t_batched * 1e6, f"speedup={speedup:.2f}x")
+    emit("fed_round_telemetry", t_telemetry * 1e6,
+         f"overhead_ratio={telemetry_ratio:.3f}")
     return payload
 
 
@@ -70,8 +99,4 @@ if __name__ == "__main__":
                     help="write the bench JSON here (for the CI "
                          "regression gate / artifacts)")
     args = ap.parse_args()
-    if args.quick:
-        print(run(steps=2, clients=6, model=args.model,
-                  write=args.out is not None, out=args.out))
-    else:
-        print(run(model=args.model, out=args.out))
+    print(run(model=args.model, out=args.out, quick=args.quick))

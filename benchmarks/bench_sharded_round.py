@@ -29,8 +29,9 @@ if "host_platform_device_count" not in _FLAGS:
 
 import jax                                                    # noqa: E402
 
-from benchmarks.common import (emit, fed_round_config,        # noqa: E402
-                               time_fed_round, write_json)
+from benchmarks.common import (bench_telemetry, emit,         # noqa: E402
+                               fed_round_config, time_fed_round,
+                               write_json)
 from repro.federation.simulation import FedConfig, Federation  # noqa: E402
 from repro.launch.mesh import make_federation_mesh            # noqa: E402
 
@@ -45,21 +46,35 @@ def _time_round(mesh, steps: int, cfg_kw: dict) -> float:
 
 
 def run(steps: int = 4, clients: int = 64, model: str = "bert-base",
-        device_counts=None, write: bool = True, out: str = None):
+        device_counts=None, write: bool = True, out: str = None,
+        quick: bool = False):
     n_avail = len(jax.devices())
+    if quick:
+        # CI smoke config; never clobber the committed full-run record
+        steps, clients = 2, 16
+        if device_counts is None:
+            device_counts = sorted({1, n_avail})
+        write = write and out is not None
     if device_counts is None:
         device_counts = [d for d in (1, 2, 4, 8, 16) if d <= n_avail]
     # population is the swept variable here, so the dataset scales with
     # it (50 examples/client) instead of bench_fed_round's fixed total
     cfg_kw = fed_round_config(clients, model, total_examples=50 * clients)
-    t_unsharded = _time_round(None, steps, cfg_kw)
-    sharded, speedup = {}, {}
-    for d in device_counts:
-        t_d = _time_round(make_federation_mesh(d), steps, cfg_kw)
-        sharded[str(d)] = round(t_d, 3)
-        speedup[str(d)] = round(t_unsharded / t_d, 2)
-        emit("sharded_round", t_d * 1e6,
-             f"{model}:{clients}c/{d}dev speedup={speedup[str(d)]}x")
+    out_path = os.path.abspath(out or OUT_PATH)
+    # every config times under the same (enabled) telemetry condition,
+    # so the gated speedup ratios stay apples-to-apples
+    with bench_telemetry("sharded_round",
+                         out_path if write else None,
+                         clients=clients, model=model, steps=steps,
+                         devices=n_avail):
+        t_unsharded = _time_round(None, steps, cfg_kw)
+        sharded, speedup = {}, {}
+        for d in device_counts:
+            t_d = _time_round(make_federation_mesh(d), steps, cfg_kw)
+            sharded[str(d)] = round(t_d, 3)
+            speedup[str(d)] = round(t_unsharded / t_d, 2)
+            emit("sharded_round", t_d * 1e6,
+                 f"{model}:{clients}c/{d}dev speedup={speedup[str(d)]}x")
     payload = {
         # labels come from the shared config so the record can't drift
         # from the measured workload
@@ -73,7 +88,7 @@ def run(steps: int = 4, clients: int = 64, model: str = "bert-base",
         "speedup_vs_unsharded": speedup,
     }
     if write:
-        write_json(os.path.abspath(out or OUT_PATH), payload)
+        write_json(out_path, payload)
     return payload
 
 
@@ -87,10 +102,4 @@ if __name__ == "__main__":
                     help="write the bench JSON here (quick mode only "
                          "writes when --out is given)")
     args = ap.parse_args()
-    if args.quick:
-        n = len(jax.devices())
-        print(run(steps=2, clients=16, model=args.model,
-                  device_counts=sorted({1, n}), write=args.out is not None,
-                  out=args.out))
-    else:
-        print(run(model=args.model, out=args.out))
+    print(run(model=args.model, out=args.out, quick=args.quick))

@@ -33,7 +33,7 @@ import os
 
 import numpy as np
 
-from benchmarks.common import emit, write_json
+from benchmarks.common import bench_telemetry, emit, write_json
 from repro.federation.simulation import FedConfig, Federation
 from repro.federation.topology import make_churn_trace
 from repro.runtime import RuntimeConfig
@@ -76,16 +76,21 @@ def run(quick: bool = False, method: str = "elsa-nocluster"):
     churn = make_churn_trace(fed_kw["n_clients"], 1e6, **churn_kw)
 
     results = {}
-    for policy in POLICIES:
-        fed = Federation(FedConfig(**fed_kw))
-        h = fed.run(method, eval_every=1,
-                    runtime=RuntimeConfig(policy=policy, churn=churn),
-                    **run_kw)
-        results[policy] = h
-        emit(f"tta_{policy}_sim_s", h["time"][-1] * 1e6,
-             f"final_acc={h['final_accuracy']:.4f} "
-             f"final_loss={h['loss'][-1]:.4f} "
-             f"rounds={len(h['round'])} trace={h['trace'].summary()}")
+    # CI smoke must not clobber the committed artifact, telemetry
+    # sidecar included
+    tel_json = None if quick else os.path.abspath(OUT_PATH)
+    with bench_telemetry("time_to_accuracy", tel_json, method=method,
+                         quick=quick):
+        for policy in POLICIES:
+            fed = Federation(FedConfig(**fed_kw))
+            h = fed.run(method, eval_every=1,
+                        runtime=RuntimeConfig(policy=policy, churn=churn),
+                        **run_kw)
+            results[policy] = h
+            emit(f"tta_{policy}_sim_s", h["time"][-1] * 1e6,
+                 f"final_acc={h['final_accuracy']:.4f} "
+                 f"final_loss={h['loss'][-1]:.4f} "
+                 f"rounds={len(h['round'])} trace={h['trace'].summary()}")
 
     # primary: the worst policy's best achieved training loss, +1% slack,
     # is reachable by every policy — crossing time measures optimization

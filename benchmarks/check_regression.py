@@ -63,6 +63,14 @@ GATES = (
          desc="worst-case accuracy bought by update screening over "
               "unscreened aggregation under corrupted-client faults "
               "(screening must keep beating doing nothing)"),
+    Gate("telemetry_overhead", "BENCH_fed_round.json",
+         lambda p: p["telemetry_ratio"],
+         quick_floor=0.95, full_floor=0.95, committed_frac=None,
+         desc="telemetry-disabled / telemetry-enabled batched round "
+              "time (the zero-overhead-when-collecting contract of "
+              "docs/observability.md: an enabled round may cost at "
+              "most ~5% wall time; the ratio hovers around 1.0 so no "
+              "committed-relative floor applies)"),
     Gate("fault_screening_gap", "BENCH_fault_tolerance.json",
          lambda p: -p["max_screened_gap"],
          quick_floor=-0.10, full_floor=-0.05, committed_frac=None,

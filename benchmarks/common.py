@@ -1,6 +1,9 @@
-"""Shared benchmark helpers: timing + CSV/JSON emission."""
+"""Shared benchmark helpers: timing + CSV/JSON emission + telemetry."""
+import contextlib
 import json
 import time
+
+from repro import telemetry as tm
 
 
 def timeit(fn, *args, repeats=3, warmup=1, **kw):
@@ -43,3 +46,22 @@ def write_json(path: str, payload: dict):
     with open(path, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
         f.write("\n")
+
+
+def telemetry_path(json_path: str) -> str:
+    """Telemetry sidecar for a BENCH json: ``X.json`` -> ``X.telemetry.
+    jsonl`` (written next to the record so CI artifact uploads of the
+    bench directory carry both)."""
+    base = json_path[:-5] if json_path.endswith(".json") else json_path
+    return base + ".telemetry.jsonl"
+
+
+@contextlib.contextmanager
+def bench_telemetry(bench: str, json_path: str = None, **meta):
+    """Run a bench's measured section under a telemetry session sharing
+    one schema across all ``bench_*`` scripts: meta carries the bench
+    name + config labels, and the JSONL lands beside the BENCH json
+    (``json_path=None`` collects without exporting)."""
+    jsonl = telemetry_path(json_path) if json_path else None
+    with tm.session(meta={"bench": bench, **meta}, jsonl=jsonl) as tel:
+        yield tel

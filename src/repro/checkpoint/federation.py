@@ -21,11 +21,13 @@ import dataclasses
 import json
 import os
 import re
+import time
 from types import SimpleNamespace
 from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro import telemetry as tm
 from repro.checkpoint.checkpoint import restore, save
 
 FORMAT = "elsa-federation"
@@ -95,7 +97,12 @@ class Checkpointer:
 
     def save(self, round_idx: int, state: Dict) -> str:
         path = round_path(self.cfg.dir, round_idx)
+        t0 = time.perf_counter()
         save(path, state)
+        if tm.enabled():
+            tm.observe("checkpoint.save_s", time.perf_counter() - t0)
+            tm.inc("checkpoint.saves", 1)
+            tm.inc("checkpoint.bytes_written", os.path.getsize(path))
         for old in list_checkpoints(self.cfg.dir)[:-self.cfg.keep]:
             os.unlink(old)
         return path
@@ -163,7 +170,12 @@ def build_state(fed, *, method: str, steps_per_round: int, round_idx: int,
 def load_state(path: str) -> Dict:
     """Read + validate a federation checkpoint; clear ``ValueError`` on
     truncation, wrong format, version skew, or missing sections."""
+    t0 = time.perf_counter()
     state = restore(path)
+    if tm.enabled():
+        tm.observe("checkpoint.restore_s", time.perf_counter() - t0)
+        tm.inc("checkpoint.restores", 1)
+        tm.inc("checkpoint.bytes_read", os.path.getsize(path))
     if not isinstance(state, dict) or "__format__" not in state:
         raise ValueError(
             f"{path!r} is not a federation checkpoint (no format marker); "

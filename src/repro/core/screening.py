@@ -35,6 +35,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import telemetry as tm
 from repro.core import aggregation as agg
 
 # screening verdicts, per update
@@ -147,6 +148,13 @@ def screen_updates(base, trees: Sequence, weights: Sequence[float],
     for i in range(len(verdicts)):
         if verdicts[i] == OK and i not in kept:
             verdicts[i] = LOW_TRUST
+    if tm.enabled():
+        for v in verdicts:
+            tm.inc("screening.verdicts", 1, verdict=v)
+        tm.set_gauge("screening.trust_mean", float(ledger.scores.mean()))
+        tm.set_gauge("screening.trust_min", float(ledger.scores.min()))
+        tm.set_gauge("screening.below_floor",
+                     int((ledger.scores < cfg.trust_floor).sum()))
     return ScreenReport(list(clients), verdicts, kept)
 
 
@@ -174,7 +182,9 @@ def screen_and_aggregate(base, trees: Sequence, weights: Sequence[float],
     finite_idx = [i for i, v in enumerate(report.verdicts) if v != NONFINITE]
     if not finite_idx:
         report.fallback = "keep-base"
+        tm.inc("screening.fallbacks", 1, kind="keep-base")
         return base, report
     report.fallback = "trimmed"
+    tm.inc("screening.fallbacks", 1, kind="trimmed")
     return (agg.trimmed_mean([trees[i] for i in finite_idx],
                              trim_frac=cfg.trim_frac), report)

@@ -59,6 +59,7 @@ compiled path.
 from __future__ import annotations
 
 import math
+import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -66,6 +67,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
+from repro import telemetry as tm
 from repro.core.sketch import SketchPlan
 from repro.core.split_training import Channel, Split, weighted_split_loss
 from repro.core.ssop import SSOP
@@ -257,6 +259,11 @@ class BatchedEngine:
             # replicate them once up front
             self.frozen = jax.device_put(frozen, self._replicate)
         self._round_fns: Dict = {}
+        if tm.enabled():
+            tm.set_gauge("engine.donate_buffers", float(self.donate),
+                         platform=self.platform)
+            tm.set_gauge("engine.n_shards", float(self.n_shards),
+                         platform=self.platform)
 
     # -- compiled round function per split configuration -------------------
     def _round_fn(self, split: Split, prox: bool):
@@ -389,8 +396,32 @@ class BatchedEngine:
                 toks, labs, wts = (jnp.asarray(toks), jnp.asarray(labs),
                                    jnp.asarray(wts))
             fn = self._round_fn(split, prox_anchor is not None)
-            out_stack, losses = fn(self.frozen, lora_stack, ssop_stack,
-                                   prox_anchor, toks, labs, wts)
+            if tm.enabled():
+                # compile-vs-execute accounting: the jit cache growing
+                # across this dispatch means a fresh trace+compile for
+                # this (split, cohort-bucket) shape; steady state stays
+                # at one executable per (split, bucket)
+                lbl = f"p{split.p}q{split.q}o{split.o}"
+                prox_l = prox_anchor is not None
+                before = fn._cache_size()
+                t0 = time.perf_counter()
+                out_stack, losses = fn(self.frozen, lora_stack,
+                                       ssop_stack, prox_anchor,
+                                       toks, labs, wts)
+                dur = time.perf_counter() - t0
+                compiled = fn._cache_size() > before
+                if compiled:
+                    tm.inc("engine.jit_compiles", 1, split=lbl,
+                           bucket=size, prox=prox_l)
+                tm.observe("engine.dispatch_s", dur, compiled=compiled)
+                tm.inc("engine.clients", n_real)
+                tm.inc("engine.phantom_rows", size - n_real)
+                tm.set_gauge("engine.compile_cache", fn._cache_size(),
+                             split=lbl, prox=prox_l)
+            else:
+                out_stack, losses = fn(self.frozen, lora_stack,
+                                       ssop_stack, prox_anchor,
+                                       toks, labs, wts)
             pending.append((members, out_stack, losses))
 
         # one host sync for every bucket's (steps, N) loss array

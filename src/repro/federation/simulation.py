@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import telemetry as tm
 from repro.core import aggregation as agg
 from repro.core import clustering as clus
 from repro.core import splitting as split_mod
@@ -608,7 +609,8 @@ class Federation:
             history, client_losses = res.history, res.client_losses
             start_round, last_delta = res.round_idx + 1, res.delta
         else:
-            groups, div, trust = self._assign_groups(method, rng)
+            with tm.span("profile", method=method):
+                groups, div, trust = self._assign_groups(method, rng)
             theta = self.lora0
             server_state = server_opt.init(theta) if server_opt else None
             client_losses: Dict[int, List[float]] = {
@@ -641,9 +643,12 @@ class Federation:
                 theta_ks = {k: theta for k in actives}
                 round_maps = []
                 for _ in range(fed.t_rounds):
-                    theta_ks, loss_map = self._fused_edge_round(
-                        actives, theta_ks, steps_per_round, iters,
-                        use_split=use_split_dyn, prox_anchor=anchor)
+                    with tm.span("local_steps", round=g,
+                                 n_clients=sum(len(a) for a
+                                               in actives.values())):
+                        theta_ks, loss_map = self._fused_edge_round(
+                            actives, theta_ks, steps_per_round, iters,
+                            use_split=use_split_dyn, prox_anchor=anchor)
                     round_maps.append(loss_map)
                 # record group-major (all of group k's edge rounds, then
                 # the next group), matching the per-group path exactly —
@@ -659,37 +664,45 @@ class Federation:
                 for k, active in actives.items():
                     theta_k = theta
                     for _ in range(fed.t_rounds):
-                        locals_, weights, loss_map = self._edge_round(
-                            active, theta_k, steps_per_round, iters,
-                            use_split=use_split_dyn, prox_anchor=anchor)
+                        with tm.span("local_steps", round=g, edge=k,
+                                     n_clients=len(active)):
+                            locals_, weights, loss_map = self._edge_round(
+                                active, theta_k, steps_per_round, iters,
+                                use_split=use_split_dyn,
+                                prox_anchor=anchor)
                         for n in active:
                             losses.append(loss_map[n])
                             client_losses[n].append(loss_map[n])
-                        theta_k = self.screened_aggregate(
-                            active, locals_, weights, theta_k)
+                        with tm.span("edge_agg", round=g, edge=k,
+                                     n_updates=len(active)):
+                            theta_k = self.screened_aggregate(
+                                active, locals_, weights, theta_k)
                     edge_thetas[k] = theta_k
             for k, active in actives.items():
                 edge_alphas[k] = agg.edge_weight(
                     agg.mean_pairwise_kld(div, active),
                     self.fusion_trust(trust, active))
 
-            if method in ("elsa", "elsa-fixed", "elsa-nocluster"):
-                theta_new = agg.cloud_aggregate(edge_thetas, edge_alphas,
-                                                mode=fed.aggregate)
-            else:
-                ws = {k: 1.0 for k in edge_thetas}
-                theta_new = agg.cloud_aggregate(edge_thetas, ws,
-                                                mode=fed.aggregate)
+            with tm.span("cloud_agg", round=g, n_edges=len(edge_thetas)):
+                if method in ("elsa", "elsa-fixed", "elsa-nocluster"):
+                    theta_new = agg.cloud_aggregate(edge_thetas,
+                                                    edge_alphas,
+                                                    mode=fed.aggregate)
+                else:
+                    ws = {k: 1.0 for k in edge_thetas}
+                    theta_new = agg.cloud_aggregate(edge_thetas, ws,
+                                                    mode=fed.aggregate)
 
-            if server_opt is not None:
-                pseudo = jax.tree_util.tree_map(lambda a, b: a - b, theta,
-                                                theta_new)
-                theta_new, server_state = server_opt.update(theta, pseudo,
-                                                            server_state)
-            delta = agg.global_delta(theta_new, theta)
+                if server_opt is not None:
+                    pseudo = jax.tree_util.tree_map(lambda a, b: a - b,
+                                                    theta, theta_new)
+                    theta_new, server_state = server_opt.update(
+                        theta, pseudo, server_state)
+                delta = agg.global_delta(theta_new, theta)
             theta = theta_new
             if g % eval_every == 0 or g == global_rounds - 1:
-                acc = self.evaluate(theta)
+                with tm.span("eval", round=g):
+                    acc = self.evaluate(theta)
                 history["round"].append(g)
                 history["accuracy"].append(acc)
                 history["loss"].append(float(np.mean(losses)))
@@ -705,6 +718,7 @@ class Federation:
                     rng=rng, iters=iters, history=history,
                     client_losses=client_losses, groups=groups, div=div,
                     trust=trust, delta=delta))
+            tm.end_round(g)
             if delta <= fed.xi:
                 break
         history["final_accuracy"] = history["accuracy"][-1]

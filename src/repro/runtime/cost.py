@@ -41,11 +41,15 @@ DOWNLINK_RATIO_DEFAULT = 4.0  # downlink/uplink bandwidth asymmetry
 
 @dataclasses.dataclass(frozen=True)
 class RoundCost:
-    """Cost breakdown of one local round (seconds)."""
+    """Cost breakdown of one local round (seconds + wire bytes)."""
     compute_s: float
     comm_s: float          # uplink: boundary activations + LoRA upload
     latency_s: float
     downlink_s: float = 0.0  # cloud->client model broadcast
+    # wire volume behind the comm terms (telemetry's bytes breakdown;
+    # informational — the seconds above stay the costs of record)
+    uplink_bytes: float = 0.0
+    downlink_bytes: float = 0.0
 
     @property
     def total_s(self) -> float:
@@ -111,8 +115,9 @@ class ClientCostModel:
         # the real examples-per-round count) + the LoRA upload to the edge
         per_round = dataclasses.replace(self.comm, t_rounds=1)
         bw = float(self.topo.bandwidth[client])
-        comm = client_comm_time(per_round, self.batch_size * steps, bw)
-        comm += self.comm.lora_bytes / max(bw, 1e-9)
+        activ_s = client_comm_time(per_round, self.batch_size * steps, bw)
+        comm = activ_s + self.comm.lora_bytes / max(bw, 1e-9)
+        up_bytes = activ_s * bw + self.comm.lora_bytes
         # cloud->client model broadcast before training starts
         downlink = self.comm.lora_bytes / max(bw * self.downlink_ratio,
                                               1e-9)
@@ -121,7 +126,9 @@ class ClientCostModel:
             self.topo.latency.shape[1] else int(
                 np.argmin(self.topo.latency[client]))
         lat = 2.0 * float(self.topo.latency[client, k]) / 1e3
-        return RoundCost(compute, comm, lat, downlink)
+        return RoundCost(compute, comm, lat, downlink,
+                         uplink_bytes=up_bytes,
+                         downlink_bytes=float(self.comm.lora_bytes))
 
     def estimate_population(self, splits: Dict[int, Split], steps: int,
                             edge_of: Optional[Dict[int, int]] = None

@@ -36,6 +36,7 @@ from typing import Dict, List, Optional
 import jax
 import numpy as np
 
+from repro import telemetry as tm
 from repro.core import aggregation as agg
 from repro.data.pipeline import CountingIterator, infinite_batches
 from repro.federation.topology import corrupt_update
@@ -74,7 +75,8 @@ class _SchedulerBase:
         rng = np.random.default_rng(fc.seed + 5)
         groups = div = trust = None
         if assign:
-            groups, div, trust = self.fed._assign_groups(method, rng)
+            with tm.span("profile", method=method):
+                groups, div, trust = self.fed._assign_groups(method, rng)
         iters = {n: CountingIterator(
                      infinite_batches(self.fed.data[n].tokens,
                                       self.fed.data[n].labels,
@@ -93,9 +95,20 @@ class _SchedulerBase:
 
     def _round_seconds(self, n: int, use_split: bool, steps: int,
                        edge: int, round_idx: int) -> float:
-        return self.cost.round_cost(
+        rc = self.cost.round_cost(
             n, self.fed.split_for(n, use_split), steps,
-            edge, round_idx).total_s
+            edge, round_idx)
+        if tm.enabled():
+            # per-phase simulated seconds + wire bytes, one bill per
+            # dispatch (docs/observability.md: the sim-time breakdown
+            # lives in counters, wall time in spans)
+            tm.inc("runtime.sim.compute_s", rc.compute_s)
+            tm.inc("runtime.sim.uplink_s", rc.comm_s)
+            tm.inc("runtime.sim.downlink_s", rc.downlink_s)
+            tm.inc("runtime.sim.latency_s", rc.latency_s)
+            tm.inc("runtime.uplink_bytes", rc.uplink_bytes)
+            tm.inc("runtime.downlink_bytes", rc.downlink_bytes)
+        return rc.total_s
 
     # -- cloud fusion (identical math to Federation.run) -------------------
     def _cloud_fuse(self, method: str, edge_thetas, edge_alphas, theta,
@@ -122,7 +135,8 @@ class _SchedulerBase:
     def _record_eval(self, history, round_idx: int, t: float, theta,
                      losses, delta: float, log: bool, label: str) -> None:
         """Evaluate + append one history/trace point (all policies)."""
-        acc = self.fed.evaluate(theta)
+        with tm.span("eval", round=round_idx):
+            acc = self.fed.evaluate(theta)
         self.trace.log(t, EVAL, round=round_idx, accuracy=acc)
         history["round"].append(round_idx)
         history["time"].append(t)
@@ -215,64 +229,76 @@ class SyncScheduler(_SchedulerBase):
                 theta_k = theta
                 t_k = t_global
                 for r in range(fc.t_rounds):
-                    avail = [n for n in active
-                             if self.churn.is_online(n, t_k)]
-                    while not avail:
-                        # whole cohort offline: the barrier waits for the
-                        # first rejoin (finite churn traces guarantee one)
-                        t_k = min(self.churn.next_online(n, t_k)
-                                  for n in active
-                                  if not self.churn.is_online(n, t_k))
+                    with tm.span("dispatch", round=g, edge=k) as sp_d:
                         avail = [n for n in active
                                  if self.churn.is_online(n, t_k)]
-                    for n in avail:
-                        self.trace.log(t_k, DISPATCH, n, k, round=g,
-                                       edge_round=r)
-                    for n in active:
-                        if n not in avail:
-                            self.trace.log(t_k, OFFLINE, n, k,
-                                           round=g, edge_round=r)
-                    locals_, weights, loss_map = fed._edge_round(
-                        avail, theta_k, steps_per_round, iters,
-                        use_split=use_split_dyn,
-                        prox_anchor=theta if method == "fedprox" else None)
+                        while not avail:
+                            # whole cohort offline: the barrier waits for
+                            # the first rejoin (finite churn traces
+                            # guarantee one)
+                            t_k = min(self.churn.next_online(n, t_k)
+                                      for n in active
+                                      if not self.churn.is_online(n, t_k))
+                            avail = [n for n in active
+                                     if self.churn.is_online(n, t_k)]
+                        for n in avail:
+                            self.trace.log(t_k, DISPATCH, n, k, round=g,
+                                           edge_round=r)
+                        for n in active:
+                            if n not in avail:
+                                self.trace.log(t_k, OFFLINE, n, k,
+                                               round=g, edge_round=r)
+                        sp_d.set(n_clients=len(avail))
+                    with tm.span("local_steps", round=g, edge=k,
+                                 n_clients=len(avail)):
+                        locals_, weights, loss_map = fed._edge_round(
+                            avail, theta_k, steps_per_round, iters,
+                            use_split=use_split_dyn,
+                            prox_anchor=(theta if method == "fedprox"
+                                         else None))
                     barrier = t_k
                     upds, wts, senders = [], [], []
-                    for lora_n, w_n, n in zip(locals_, weights, avail):
-                        fault = self._sample_fault(n, disp[n])
-                        disp[n] += 1
-                        dur = self._round_seconds(n, use_split_dyn,
-                                                  steps_per_round, k, g)
-                        f_n = self.churn.finish_time(n, t_k, dur)
-                        if fault is not None and fault.kind == "crash":
-                            # work lost, not paused: no update, no loss,
-                            # and the barrier does not wait for the body
-                            t_c = t_k + fault.at_frac * max(f_n - t_k, 0.0)
-                            self.trace.log(t_c, CRASH, n, k, round=g,
-                                           edge_round=r)
-                            continue
-                        self.trace.log(f_n, ARRIVAL, n, k, round=g)
-                        barrier = max(barrier, f_n)
-                        losses.append(loss_map[n])
-                        client_losses[n].append(loss_map[n])
-                        if fault is not None and fault.kind == "drop":
-                            self.trace.log(f_n, DROP, n, k, round=g)
-                            continue
-                        if fault is not None and fault.kind == "corrupt":
-                            lora_n = corrupt_update(theta_k, lora_n, fault)
-                            self.trace.log(f_n, CORRUPT, n, k, round=g,
-                                           mode=fault.mode)
-                        upds.append(lora_n)
-                        wts.append(w_n)
-                        senders.append(n)
-                        if fault is not None and fault.kind == "dup":
+                    with tm.span("uplink", round=g, edge=k) as sp_u:
+                        for lora_n, w_n, n in zip(locals_, weights, avail):
+                            fault = self._sample_fault(n, disp[n])
+                            disp[n] += 1
+                            dur = self._round_seconds(n, use_split_dyn,
+                                                      steps_per_round, k, g)
+                            f_n = self.churn.finish_time(n, t_k, dur)
+                            if fault is not None and fault.kind == "crash":
+                                # work lost, not paused: no update, no
+                                # loss, and the barrier does not wait
+                                t_c = t_k + fault.at_frac \
+                                    * max(f_n - t_k, 0.0)
+                                self.trace.log(t_c, CRASH, n, k, round=g,
+                                               edge_round=r)
+                                continue
+                            self.trace.log(f_n, ARRIVAL, n, k, round=g)
+                            barrier = max(barrier, f_n)
+                            losses.append(loss_map[n])
+                            client_losses[n].append(loss_map[n])
+                            if fault is not None and fault.kind == "drop":
+                                self.trace.log(f_n, DROP, n, k, round=g)
+                                continue
+                            if fault is not None and fault.kind == "corrupt":
+                                lora_n = corrupt_update(theta_k, lora_n,
+                                                        fault)
+                                self.trace.log(f_n, CORRUPT, n, k, round=g,
+                                               mode=fault.mode)
                             upds.append(lora_n)
                             wts.append(w_n)
                             senders.append(n)
-                            self.trace.log(f_n, DUP, n, k, round=g)
+                            if fault is not None and fault.kind == "dup":
+                                upds.append(lora_n)
+                                wts.append(w_n)
+                                senders.append(n)
+                                self.trace.log(f_n, DUP, n, k, round=g)
+                        sp_u.set(sim_s=barrier - t_k, n_updates=len(upds))
                     if upds:
-                        theta_k = fed.screened_aggregate(senders, upds,
-                                                         wts, theta_k)
+                        with tm.span("edge_agg", round=g, edge=k,
+                                     n_updates=len(upds)):
+                            theta_k = fed.screened_aggregate(
+                                senders, upds, wts, theta_k)
                     # else: every uplink was lost; the edge keeps its model
                     t_k = barrier
                     self.trace.log(t_k, EDGE_AGG, -1, k, round=g,
@@ -282,9 +308,10 @@ class SyncScheduler(_SchedulerBase):
                 edge_done[k] = t_k
 
             t_global = max(edge_done.values()) + self.rt.backhaul_s
-            theta, server_state, delta = self._cloud_fuse(
-                method, edge_thetas, edge_alphas, theta, server_opt,
-                server_state)
+            with tm.span("cloud_agg", round=g, n_edges=len(edge_thetas)):
+                theta, server_state, delta = self._cloud_fuse(
+                    method, edge_thetas, edge_alphas, theta, server_opt,
+                    server_state)
             self.trace.log(t_global, CLOUD_AGG, round=g,
                            n_edges=len(edge_thetas))
             if g % eval_every == 0 or g == global_rounds - 1:
@@ -299,6 +326,7 @@ class SyncScheduler(_SchedulerBase):
                     client_losses=client_losses, groups=groups, div=div,
                     trust=trust, delta=delta, t_global=t_global,
                     dispatches=disp, trace_records=self.trace.records))
+            tm.end_round(g, sim_time_s=t_global)
             if delta <= fc.xi or t_global >= self.rcfg.max_sim_s:
                 break
         return self._finish_history(history, theta, client_losses)
@@ -370,14 +398,16 @@ class DeadlineScheduler(_SchedulerBase):
                 edge_done[k] = t_k
 
             t_global = max(edge_done.values()) + self.rt.backhaul_s
-            theta, server_state, delta = self._cloud_fuse(
-                method, edge_thetas, edge_alphas, theta, server_opt,
-                server_state)
+            with tm.span("cloud_agg", round=g, n_edges=len(edge_thetas)):
+                theta, server_state, delta = self._cloud_fuse(
+                    method, edge_thetas, edge_alphas, theta, server_opt,
+                    server_state)
             self.trace.log(t_global, CLOUD_AGG, round=g,
                            n_edges=len(edge_thetas))
             if g % eval_every == 0 or g == global_rounds - 1:
                 self._record_eval(history, g, t_global, theta, losses,
                                   delta, log, f"deadline/{method}")
+            tm.end_round(g, sim_time_s=t_global)
             if delta <= fc.xi or t_global >= self.rcfg.max_sim_s:
                 break
         return self._finish_history(history, theta, client_losses)
@@ -394,10 +424,13 @@ class DeadlineScheduler(_SchedulerBase):
             ready = [n for n in active if states[n].idle
                      and self.churn.is_online(n, t_k)]
             if ready:
-                locals_, _, loss_map = fed._edge_round(
-                    ready, theta_k, steps, iters, use_split=use_split_dyn,
-                    prox_anchor=(theta_anchor if method == "fedprox"
-                                 else None))
+                with tm.span("local_steps", round=g, edge=k,
+                             n_clients=len(ready)):
+                    locals_, _, loss_map = fed._edge_round(
+                        ready, theta_k, steps, iters,
+                        use_split=use_split_dyn,
+                        prox_anchor=(theta_anchor if method == "fedprox"
+                                     else None))
                 for lora_n, n in zip(locals_, ready):
                     fault = self._sample_fault(n, states[n].dispatches)
                     dur = self._round_seconds(n, use_split_dyn, steps, k,
@@ -431,59 +464,66 @@ class DeadlineScheduler(_SchedulerBase):
             # arrival so an edge round never aggregates nothing
             deadline = nxt.time
         upds, wts, senders, n_late, rep_w = [], [], [], 0, 0.0
-        for ev in queue.drain_until(deadline):
-            n = ev.client
-            if ev.kind == CRASH:
-                # in-flight work lost; the client idles and is eligible
-                # for re-dispatch from the next window's ready set
-                states[n].crash()
-                self.trace.log(ev.time, CRASH, n, k, round=g)
-                continue
-            states[n].complete(ev.payload)
-            lora_n, loss_n, fault = states[n].collect()
-            late = r_idx - states[n].base_round
-            losses.append(loss_n)
-            client_losses[n].append(loss_n)
-            self.trace.log(ev.time, ARRIVAL, n, k, round=g, late=late)
-            if fault is not None and fault.kind == "drop":
-                # trained (loss counted) but the uplink was lost: not
-                # folded, and its mass stays with the absent cohort
-                self.trace.log(ev.time, DROP, n, k, round=g)
-                continue
-            if fault is not None and fault.kind == "corrupt":
-                self.trace.log(ev.time, CORRUPT, n, k, round=g,
-                               mode=fault.mode)
-            w = fed.client_weight(n) \
-                * (self.rcfg.straggler_discount ** late)
-            upds.append(lora_n)
-            wts.append(w)
-            senders.append(n)
-            rep_w += fed.client_weight(n)
-            n_late += int(late > 0)
-            if fault is not None and fault.kind == "dup":
+        with tm.span("uplink", round=g, edge=k) as sp_u:
+            for ev in queue.drain_until(deadline):
+                n = ev.client
+                if ev.kind == CRASH:
+                    # in-flight work lost; the client idles and is
+                    # eligible for re-dispatch from the next window
+                    states[n].crash()
+                    self.trace.log(ev.time, CRASH, n, k, round=g)
+                    continue
+                states[n].complete(ev.payload)
+                lora_n, loss_n, fault = states[n].collect()
+                late = r_idx - states[n].base_round
+                losses.append(loss_n)
+                client_losses[n].append(loss_n)
+                self.trace.log(ev.time, ARRIVAL, n, k, round=g, late=late)
+                if fault is not None and fault.kind == "drop":
+                    # trained (loss counted) but the uplink was lost: not
+                    # folded, and its mass stays with the absent cohort
+                    self.trace.log(ev.time, DROP, n, k, round=g)
+                    continue
+                if fault is not None and fault.kind == "corrupt":
+                    self.trace.log(ev.time, CORRUPT, n, k, round=g,
+                                   mode=fault.mode)
+                w = fed.client_weight(n) \
+                    * (self.rcfg.straggler_discount ** late)
                 upds.append(lora_n)
                 wts.append(w)
                 senders.append(n)
-                self.trace.log(ev.time, DUP, n, k, round=g)
-        if self.fc.screen and upds:
-            upds, wts = fed.screen_cohort(senders, upds, wts, theta_k)
-        # partial participation: the current edge model stands in for the
-        # cohort mass that did NOT report this window, so a lone (possibly
-        # stale, discounted) arrival perturbs theta_k proportionally
-        # instead of replacing it — fedavg's weight normalization would
-        # otherwise cancel the straggler discount whenever a window's
-        # arrivals are uniformly late
-        absent_w = max(float(sum(fed.client_weight(n) for n in active))
-                       - rep_w, 0.0)
-        if upds and absent_w > 0:
-            theta_k = agg.aggregate_adapters([theta_k] + upds,
-                                             [absent_w] + wts,
-                                             mode=self.fc.aggregate)
-        elif upds:
-            theta_k = agg.aggregate_adapters(upds, wts,
-                                             mode=self.fc.aggregate)
-        # else: every uplink this window was lost or screened out; the
-        # edge keeps its model
+                rep_w += fed.client_weight(n)
+                n_late += int(late > 0)
+                if fault is not None and fault.kind == "dup":
+                    upds.append(lora_n)
+                    wts.append(w)
+                    senders.append(n)
+                    self.trace.log(ev.time, DUP, n, k, round=g)
+            sp_u.set(sim_s=deadline - t_k, n_updates=len(upds),
+                     n_stragglers=n_late)
+        if tm.enabled() and n_late:
+            # straggler carry-overs folded this window (late > 0 rounds)
+            tm.inc("runtime.stragglers", n_late)
+        with tm.span("edge_agg", round=g, edge=k, n_updates=len(upds)):
+            if self.fc.screen and upds:
+                upds, wts = fed.screen_cohort(senders, upds, wts, theta_k)
+            # partial participation: the current edge model stands in for
+            # the cohort mass that did NOT report this window, so a lone
+            # (possibly stale, discounted) arrival perturbs theta_k
+            # proportionally instead of replacing it — fedavg's weight
+            # normalization would otherwise cancel the straggler discount
+            # whenever a window's arrivals are uniformly late
+            absent_w = max(float(sum(fed.client_weight(n)
+                                     for n in active)) - rep_w, 0.0)
+            if upds and absent_w > 0:
+                theta_k = agg.aggregate_adapters([theta_k] + upds,
+                                                 [absent_w] + wts,
+                                                 mode=self.fc.aggregate)
+            elif upds:
+                theta_k = agg.aggregate_adapters(upds, wts,
+                                                 mode=self.fc.aggregate)
+            # else: every uplink this window was lost or screened out;
+            # the edge keeps its model
         self.trace.log(deadline, EDGE_AGG, -1, k, round=g,
                        n_updates=len(upds), n_stragglers=n_late)
         edge_round_idx[k] = r_idx + 1
@@ -654,9 +694,11 @@ class AsyncScheduler(_SchedulerBase):
                 # this window (== full membership except fedavg-random)
                 alphas = {k: self._edge_alpha(div, trust, cohort[k])
                           for k in groups}
-                theta, server_state, delta = self._cloud_fuse(
-                    method, edge_theta, alphas, theta, server_opt,
-                    server_state)
+                with tm.span("cloud_agg", round=fusions - 1,
+                             n_edges=len(groups)):
+                    theta, server_state, delta = self._cloud_fuse(
+                        method, edge_theta, alphas, theta, server_opt,
+                        server_state)
                 self._anchor = theta
                 for k in groups:       # broadcast fused model to edges
                     edge_theta[k] = theta
@@ -671,6 +713,7 @@ class AsyncScheduler(_SchedulerBase):
                     # reset only once recorded, so with eval_every > 1
                     # the loss covers every window since the last eval
                     window_losses = []
+                tm.end_round(fusions - 1, sim_time_s=t)
                 if delta <= fc.xi:
                     break
                 if fusions < global_rounds:
@@ -693,11 +736,12 @@ class AsyncScheduler(_SchedulerBase):
     def _dispatch(self, ready: List[int], k: int, t: float, theta_k,
                   version_k: int, states, queue) -> None:
         fed = self.fed
-        locals_, _, loss_map = fed._edge_round(
-            ready, theta_k, self._steps, self._iters,
-            use_split=self._use_split_dyn,
-            prox_anchor=(self._anchor if self._method == "fedprox"
-                         else None))
+        with tm.span("local_steps", edge=k, n_clients=len(ready)):
+            locals_, _, loss_map = fed._edge_round(
+                ready, theta_k, self._steps, self._iters,
+                use_split=self._use_split_dyn,
+                prox_anchor=(self._anchor if self._method == "fedprox"
+                             else None))
         for lora_n, n in zip(locals_, ready):
             fault = self._sample_fault(n, states[n].dispatches)
             dur = self._round_seconds(n, self._use_split_dyn, self._steps,

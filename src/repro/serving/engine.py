@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import telemetry as tm
 from repro.configs.base import ArchConfig
 from repro.models import zoo
 from repro.models.params import init_tree
@@ -78,6 +79,14 @@ class ServingEngine:
         self.queue.append(req)
         return req
 
+    def swap_adapter(self, lora) -> None:
+        """Hot-swap the serving LoRA (e.g. after a cloud fusion): the
+        jitted decode step re-runs with the new weights on its next tick
+        without recompiling (same shapes), so a federation can push
+        fused adapters into a live engine between batches."""
+        self.lora = lora
+        tm.inc("serving.adapter_swaps", 1)
+
     def _fresh_cache(self):
         return init_tree(self.model.cache_specs(self.cfg, self.batch_size,
                                                 self.max_len),
@@ -135,6 +144,13 @@ class ServingEngine:
                 r.done = True
                 r.finished_at = time.time()
             self.stats["requests"] += 1
+        if tm.enabled():
+            for r in batch:
+                tm.observe("serving.request_s",
+                           max(r.finished_at - r.submitted_at, 0.0))
+            tm.inc("serving.requests", len(batch))
+            tm.inc("serving.tokens",
+                   sum(len(r.output) for r in batch))
         return batch
 
     def run_until_drained(self) -> List[GenerationRequest]:
