@@ -1,0 +1,134 @@
+"""Population-scale study: round cost vs registered population size.
+
+The registry-backed population (docs/population.md) promises that
+per-round cost scales with the *cohort* (the federation's ``n_clients``
+slots), not the *registered population*: sampling is O(cohort) Floyd
+draws, per-client state lives in preallocated array columns, and the
+LoRA adapter column allocates lazily in row-block shards, so growing
+the population 1000x at a fixed cohort should leave round wall time
+flat and registry memory dominated by the clients that actually
+trained.
+
+This bench runs the same fixed-cohort federation (8 slots, ``fedavg``,
+sync loop) against populations from 10^2 up to 10^5 registered clients
+and records, per population size:
+
+- **round_s**: steady-state mean wall seconds per global round, summed
+  from the telemetry round spans (round 0 is excluded — it holds the
+  jit compiles);
+- **registry_mib**: resident registry bytes after the run (scalar
+  columns + allocated adapter shards only — the lazy-allocation
+  contract);
+- cohort/eligible/sampled counts from the ``population.*`` gauges.
+
+Headline gate metric (``check_regression.py``): the round-time ratio
+``round_s_small_over_large`` between the 10^2 and 10^4 populations —
+flat-to-sublinear scaling keeps it near 1.0; a registry that silently
+goes O(N) per round drags it toward 0.
+"""
+import os
+
+from benchmarks.common import bench_telemetry, emit, write_json
+from repro import telemetry as tm
+from repro.federation.simulation import FedConfig, Federation
+from repro.population import PopulationConfig
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_population_scale.json")
+
+# the fault-tolerance bench's reduced encoder federation, minus the
+# convergence tuning (this bench measures mechanics, not accuracy)
+BASE = dict(n_clients=8, n_edges=2, alpha=5.0, poisoned=(),
+            total_examples=800, probe_q=8, local_warmup_steps=2,
+            layers=4, t_rounds=1, batch_size=16, seed=0, seq_len=32,
+            num_classes=4, use_channel=False, pooling="mean")
+
+ROUNDS, STEPS = 5, 2
+POPULATIONS = (100, 1_000, 10_000, 100_000)
+QUICK_POPULATIONS = (100, 10_000)
+
+#: small shards + half precision keep the lazily-allocated adapter
+#: column tiny even when every round touches a fresh cohort
+SHARD_ROWS = 8
+ADAPTER_DTYPE = "float16"
+
+
+def _run_one(registered: int, rounds: int, tel) -> dict:
+    fed = Federation(FedConfig(**BASE), backend="batched")
+    pop_cfg = PopulationConfig(registered=registered, seed=17,
+                               shard_rows=SHARD_ROWS,
+                               adapter_dtype=ADAPTER_DTYPE)
+    base_rounds = len(tel.rounds)
+    hist = fed.run("fedavg", global_rounds=rounds, steps_per_round=STEPS,
+                   population=pop_cfg)
+    recs = tel.rounds[base_rounds:]
+    # steady-state rounds only: round 0 carries the jit compiles (and
+    # the engine warm-up), which would swamp the scaling signal
+    steady = [sum(s.get("dur_s", 0.0) for s in r["spans"])
+              for r in recs[1:]]
+    reg = fed._population.registry
+    return {
+        "registered": registered,
+        "cohort": BASE["n_clients"],
+        "rounds_timed": len(steady),
+        "round_s": sum(steady) / max(len(steady), 1),
+        "round_s_first": sum(s.get("dur_s", 0.0)
+                             for s in recs[0]["spans"]) if recs else 0.0,
+        "registry_mib": reg.nbytes / 2**20,
+        "adapter_shards_allocated": reg.allocated_shards,
+        "adapter_shards_total": reg.n_shards,
+        "eligible": int(tel.gauge("population.eligible") or 0),
+        "sampled": int(tel.gauge("population.sampled") or 0),
+        "final_accuracy": float(hist["final_accuracy"]),
+    }
+
+
+def run(quick: bool = False, write: bool = True, out: str = None):
+    rounds = 3 if quick else ROUNDS
+    pops = QUICK_POPULATIONS if quick else POPULATIONS
+    out_path = os.path.abspath(out or OUT_PATH)
+    results = {}
+    with bench_telemetry("population_scale", out_path if write else None,
+                         rounds=rounds, quick=quick) as tel:
+        for n in pops:
+            r = _run_one(n, rounds, tel)
+            results[str(n)] = r
+            emit(f"population_scale_{n}", r["round_s"] * 1e6,
+                 f"round_s={r['round_s']:.3f} "
+                 f"registry_mib={r['registry_mib']:.2f} "
+                 f"shards={r['adapter_shards_allocated']}"
+                 f"/{r['adapter_shards_total']}")
+
+    # flatness gate between the 10^2 and 10^4 arms (present in both
+    # modes): flat scaling -> ratio ~1, O(N) rot -> ratio -> 0
+    small = results["100"]["round_s"]
+    large = results["10000"]["round_s"]
+    payload = {
+        "config": {**{k: (list(v) if isinstance(v, tuple) else v)
+                      for k, v in BASE.items()},
+                   "rounds": rounds, "steps": STEPS,
+                   "shard_rows": SHARD_ROWS,
+                   "adapter_dtype": ADAPTER_DTYPE, "quick": quick},
+        "populations": results,
+        "round_s_small_over_large": round(small / max(large, 1e-12), 4),
+        "round_s_ratio_large_over_small": round(large / max(small, 1e-12),
+                                                4),
+        "max_registry_mib": round(max(r["registry_mib"]
+                                      for r in results.values()), 3),
+    }
+    if write:
+        write_json(out_path, payload)
+    return payload
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="two populations, shortened horizon (CI gate; "
+                         "no BENCH json unless --out is given)")
+    ap.add_argument("--out", default=None,
+                    help="write the bench JSON here (CI regression gate)")
+    args = ap.parse_args()
+    print(run(quick=args.quick, write=args.out is not None or not args.quick,
+              out=args.out))

@@ -71,6 +71,15 @@ GATES = (
               "docs/observability.md: an enabled round may cost at "
               "most ~5% wall time; the ratio hovers around 1.0 so no "
               "committed-relative floor applies)"),
+    Gate("population_scale_flatness", "BENCH_population_scale.json",
+         lambda p: p["round_s_small_over_large"],
+         quick_floor=0.35, full_floor=0.5, committed_frac=None,
+         desc="small-population / large-population steady round time "
+              "at a fixed cohort (the registry's O(cohort) per-round "
+              "contract of docs/population.md: flat scaling keeps the "
+              "ratio near 1.0, an O(registered) regression drags it "
+              "toward 0; timing noise makes a committed-relative "
+              "floor too brittle)"),
     Gate("fault_screening_gap", "BENCH_fault_tolerance.json",
          lambda p: -p["max_screened_gap"],
          quick_floor=-0.10, full_floor=-0.05, committed_frac=None,

@@ -43,6 +43,7 @@ BENCHES = [
     ("convergence", "benchmarks.bench_convergence"),
     ("time_to_accuracy", "benchmarks.bench_time_to_accuracy"),
     ("fault_tolerance", "benchmarks.bench_fault_tolerance"),
+    ("population_scale", "benchmarks.bench_population_scale"),
 ]
 
 

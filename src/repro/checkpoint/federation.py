@@ -125,7 +125,7 @@ def build_state(fed, *, method: str, steps_per_round: int, round_idx: int,
                 theta, server_state, rng, iters, history, client_losses,
                 groups, div, trust, delta: float, t_global: float = 0.0,
                 dispatches: Optional[Dict[int, int]] = None,
-                trace_records=None) -> Dict:
+                trace_records=None, population=None) -> Dict:
     """Assemble one checkpoint payload from a live ``Federation`` run.
 
     ``rng`` is the loop's ``np.random.default_rng`` (its
@@ -133,7 +133,11 @@ def build_state(fed, *, method: str, steps_per_round: int, round_idx: int,
     msgpack's 64-bit integers — hence the JSON string).  ``iters`` are
     the per-client :class:`~repro.data.pipeline.CountingIterator`
     streams; only their draw counts are stored, the resumed process
-    rebuilds the same seeded streams and fast-forwards.
+    rebuilds the same seeded streams and fast-forwards.  With a bound
+    ``population`` the registry carries the draw cursors instead (slots
+    have no fixed occupant), so ``draws`` is stored empty and the full
+    registry snapshot rides in the optional ``population`` section —
+    legacy checkpoints without it keep loading unchanged.
     """
     ssops = []
     for n in sorted(fed._channels):
@@ -158,12 +162,14 @@ def build_state(fed, *, method: str, steps_per_round: int, round_idx: int,
         "div": np.asarray(div), "trust": np.asarray(trust),
         "ledger": None if ledger is None else ledger.state(),
         "rng_state": json.dumps(rng.bit_generator.state),
-        "draws": _pairs({n: it.count for n, it in iters.items()}),
+        "draws": _pairs({} if population is not None
+                        else {n: it.count for n, it in iters.items()}),
         "dispatches": _pairs(dispatches or {}),
         "channels": ssops,
         "history": hist,
         "client_losses": _pairs(client_losses),
         "trace": list(trace_records) if trace_records is not None else None,
+        "population": None if population is None else population.state(),
     }
 
 
@@ -196,7 +202,7 @@ def load_state(path: str) -> Dict:
 
 
 def restore_run(fed, state: Dict, *, method: str, steps_per_round: int,
-                iters, rng) -> SimpleNamespace:
+                iters, rng, population=None) -> SimpleNamespace:
     """Rehydrate a live run from a validated checkpoint payload.
 
     Side effects on ``fed``: per-client channels (SS-OP bases) are
@@ -205,6 +211,12 @@ def restore_run(fed, state: Dict, *, method: str, steps_per_round: int,
     fast-forwarded to its saved draw count.  Raises ``ValueError`` when
     the checkpoint was written under a different config/method — a
     resumed run must continue the *same* experiment.
+
+    ``population`` must match the checkpoint: a snapshot written with a
+    bound :class:`~repro.population.PopulationRuntime` restores its
+    registry (which carries the per-id draw cursors in place of the
+    slot-keyed ``draws`` section) and refuses to resume without one,
+    and vice versa.
     """
     from repro.core.split_training import Channel
     from repro.core.ssop import SSOP
@@ -224,9 +236,19 @@ def restore_run(fed, state: Dict, *, method: str, steps_per_round: int,
             f"steps_per_round={state['steps_per_round']}; resume asked "
             f"for method={method!r}, steps_per_round={steps_per_round}")
 
+    pop_state = state.get("population")
+    if (pop_state is not None) != (population is not None):
+        raise ValueError(
+            "population mismatch: the checkpoint was written "
+            + ("with" if pop_state is not None else "without")
+            + " a registry-backed population, this resume runs "
+            + ("without" if population is None else "with") + " one")
     rng.bit_generator.state = json.loads(state["rng_state"])
-    for n, count in _unpairs(state["draws"]).items():
-        iters[n].fast_forward(int(count))
+    if population is not None:
+        population.load_state(pop_state)
+    else:
+        for n, count in _unpairs(state["draws"]).items():
+            iters[n].fast_forward(int(count))
     fed._channels.clear()
     for n, ss in state["channels"]:
         ssop = None if ss is None else SSOP(u=ss["u"], v=ss["v"],

@@ -228,6 +228,9 @@ class Federation:
         self.trust_ledger = TrustLedger(fed.n_clients,
                                         beta=fed.screen_trust_beta)
         self.screen_log: List = []
+        # registry-backed population binding (docs/population.md);
+        # installed by run(population=...) / the runtime schedulers
+        self._population = None
 
     @property
     def engine(self) -> BatchedEngine:
@@ -266,8 +269,32 @@ class Federation:
                 else self._default_split())
 
     def client_weight(self, client: int) -> int:
-        """FedAvg weight: the client's example count."""
+        """FedAvg weight: the example count of the client currently
+        occupying slot ``client`` (with a bound population the occupant
+        is whatever registered id the round's cohort mapped there)."""
+        if self._population is not None:
+            return self._population.slot_weight(client)
         return len(self.data[client].tokens)
+
+    def _bind_population(self, population):
+        """Attach a registry-backed population for this run.  Accepts a
+        :class:`~repro.population.PopulationConfig` (builds the runtime)
+        or a prebuilt :class:`~repro.population.PopulationRuntime`;
+        ``None`` detaches (the bit-inert legacy dict path)."""
+        if population is None:
+            self._population = None
+            return None
+        from repro.population import PopulationConfig, PopulationRuntime
+        if isinstance(population, PopulationConfig):
+            population = PopulationRuntime(self, population)
+        elif not isinstance(population, PopulationRuntime):
+            raise TypeError(
+                f"population must be a PopulationConfig or "
+                f"PopulationRuntime, got {type(population).__name__}")
+        if population.federation is not self:
+            raise ValueError("population is bound to a different federation")
+        self._population = population
+        return population
 
     # ------------------------------------------------------------------
     def channel_for(self, client: int, lora, emb=None) -> Channel:
@@ -501,6 +528,10 @@ class Federation:
         res = self.group_steps(all_active, thetas, steps, iters,
                                use_split=use_split, prox_anchor=prox_anchor,
                                per_client=True)
+        if self._population is not None:
+            for k, act in actives.items():
+                self._population.note_updates(
+                    act, [res[n][0] for n in act], theta_ks[k])
         new_ks = {k: self.screened_aggregate(
                       act, [res[n][0] for n in act],
                       [self.client_weight(n) for n in act], theta_ks[k])
@@ -561,7 +592,7 @@ class Federation:
     def run(self, method: str = "elsa", global_rounds: int = 10,
             steps_per_round: int = 4, eval_every: int = 1,
             log: bool = False, runtime=None, checkpoint=None,
-            resume_from: Optional[str] = None) -> Dict:
+            resume_from: Optional[str] = None, population=None) -> Dict:
         """Run the federation.
 
         ``runtime=None`` keeps the historical round-synchronous loop
@@ -577,13 +608,21 @@ class Federation:
         ``resume_from`` (a checkpoint file or its directory) restores
         one and continues — bit-identically to the uninterrupted run on
         this loop and the sync runtime policy (docs/robustness.md).
+
+        ``population`` (a :class:`repro.population.PopulationConfig`)
+        decouples the registered client population from the
+        ``n_clients`` slots: each round samples a cohort of registered
+        ids into the slots (docs/population.md).  With
+        ``registered == n_clients`` the run is bit-identical to
+        ``population=None``.
         """
         if runtime is not None:
             from repro.runtime import EdgeRuntime
             return EdgeRuntime(self, runtime).run(
                 method, global_rounds=global_rounds,
                 steps_per_round=steps_per_round, eval_every=eval_every,
-                log=log, checkpoint=checkpoint, resume_from=resume_from)
+                log=log, checkpoint=checkpoint, resume_from=resume_from,
+                population=population)
         from repro.checkpoint import federation as fedckpt
         from repro.data.pipeline import CountingIterator
         fed = self.fed
@@ -591,11 +630,13 @@ class Federation:
         history = {"round": [], "accuracy": [], "loss": [], "delta": []}
 
         use_split_dyn = method not in ("elsa-fixed",)
-        iters = {n: CountingIterator(
-                     infinite_batches(self.data[n].tokens,
-                                      self.data[n].labels, fed.batch_size,
-                                      seed=fed.seed + 100 + n))
-                 for n in range(fed.n_clients)}
+        pop = self._bind_population(population)
+        iters = pop.iters if pop is not None else \
+            {n: CountingIterator(
+                 infinite_batches(self.data[n].tokens,
+                                  self.data[n].labels, fed.batch_size,
+                                  seed=fed.seed + 100 + n))
+             for n in range(fed.n_clients)}
         server_opt = self.server_optimizer(method)
 
         start_round, last_delta = 0, float("inf")
@@ -603,7 +644,7 @@ class Federation:
             state = fedckpt.load_state(fedckpt.resolve(resume_from))
             res = fedckpt.restore_run(self, state, method=method,
                                       steps_per_round=steps_per_round,
-                                      iters=iters, rng=rng)
+                                      iters=iters, rng=rng, population=pop)
             groups, div, trust = res.groups, res.div, res.trust
             theta, server_state = res.theta, res.server_state
             history, client_losses = res.history, res.client_losses
@@ -611,6 +652,8 @@ class Federation:
         else:
             with tm.span("profile", method=method):
                 groups, div, trust = self._assign_groups(method, rng)
+            if pop is not None:
+                pop.after_assign(groups)
             theta = self.lora0
             server_state = server_opt.init(theta) if server_opt else None
             client_losses: Dict[int, List[float]] = {
@@ -628,6 +671,8 @@ class Federation:
         # per-group dispatch so default runs stay bit-identical
         fuse = self.backend == "batched" and self.mesh is not None
         for g in range(start_round, global_rounds):
+            if pop is not None:
+                pop.begin_round(g)
             edge_thetas, edge_alphas, losses = {}, {}, []
             actives = {}
             for k, members in groups.items():
@@ -673,6 +718,8 @@ class Federation:
                         for n in active:
                             losses.append(loss_map[n])
                             client_losses[n].append(loss_map[n])
+                        if pop is not None:
+                            pop.note_updates(active, locals_, theta_k)
                         with tm.span("edge_agg", round=g, edge=k,
                                      n_updates=len(active)):
                             theta_k = self.screened_aggregate(
@@ -710,6 +757,10 @@ class Federation:
                 if log:
                     print(f"[{method}] round {g}: acc={acc:.4f} "
                           f"loss={np.mean(losses):.4f} delta={delta:.2e}")
+            if pop is not None:
+                # write the round's outcomes back before any snapshot so
+                # a resume sees the post-round registry
+                pop.end_round(g)
             if ckpt is not None and ckpt.due(g, global_rounds - 1, delta,
                                             fed.xi):
                 ckpt.save(g, fedckpt.build_state(
@@ -717,7 +768,7 @@ class Federation:
                     round_idx=g, theta=theta, server_state=server_state,
                     rng=rng, iters=iters, history=history,
                     client_losses=client_losses, groups=groups, div=div,
-                    trust=trust, delta=delta))
+                    trust=trust, delta=delta, population=pop))
             tm.end_round(g)
             if delta <= fed.xi:
                 break

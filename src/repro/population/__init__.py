@@ -1,0 +1,35 @@
+"""Population-scale client registry (docs/population.md).
+
+The federation machinery (:mod:`repro.federation`, :mod:`repro.runtime`)
+operates on a fixed set of ``FedConfig.n_clients`` *slots*: topology,
+splits, engine buckets, edge groups, channels and the trust ledger are
+all slot-indexed arrays of that size.  This package decouples the
+*registered population* from those slots:
+
+- :class:`~repro.population.registry.ClientRegistry` holds every
+  registered client's durable state (LoRA adapter delta, trust /
+  staleness EMAs, cluster + edge assignment, availability cursor,
+  data-seed, batch-stream cursor) in preallocated array columns —
+  no per-client Python objects, so 10^5–10^6 clients cost megabytes;
+- :class:`~repro.population.sampler.CohortSampler` materializes each
+  round's active cohort as a gather of registry rows into the slots and
+  writes round outcomes back via scatter, so per-round cost scales with
+  the cohort size, not the population size;
+- :class:`~repro.population.runtime.PopulationRuntime` binds the two to
+  a live :class:`~repro.federation.simulation.Federation`: it swaps
+  per-round client identity under the slots (data, batch streams,
+  FedAvg weights, trust) while every compiled path stays untouched.
+
+``Federation.run(..., population=PopulationConfig(registered=N))`` (and
+the sync/deadline/async runtime schedulers) activate it; with
+``registered == n_clients`` the binding is bit-inert — the identity
+cohort draws no RNG and the history matches the legacy dict path
+exactly (golden-anchored in ``tests/test_population.py``).
+"""
+from repro.population.registry import ClientRegistry
+from repro.population.sampler import (AvailabilityCursors, CohortSampler,
+                                      PopulationConfig)
+from repro.population.runtime import PopulationRuntime
+
+__all__ = ["ClientRegistry", "CohortSampler", "AvailabilityCursors",
+           "PopulationConfig", "PopulationRuntime"]

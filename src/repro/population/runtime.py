@@ -1,0 +1,273 @@
+"""PopulationRuntime: binds a registry + sampler to a live Federation.
+
+The federation's compiled machinery is slot-indexed (``n_clients``
+slots: topology, splits, buckets, channels, trust ledger).  This binding
+streams registered client *identities* through those slots, one cohort
+per round:
+
+- ``begin_round(g)`` samples the cohort, installs the slot->id map, and
+  gathers registry trust into the slot-level
+  :class:`~repro.core.screening.TrustLedger`;
+- during the round, the federation sees the occupants transparently:
+  :class:`_IterProxy` resolves ``iters[slot]`` to the occupant's seeded
+  batch stream (LRU-cached; evicted streams persist their cursor in the
+  registry ``draws`` column and fast-forward bit-exactly on return) and
+  ``Federation.client_weight`` reads the occupant's example count;
+- ``note_updates`` scatters the trained LoRA deltas (vs the dispatch
+  model) into the registry's sharded adapter column;
+- ``end_round(g)`` scatters trust/staleness/participation/cursors back.
+
+Client data: ids below ``n_clients`` reuse the federation's materialized
+datasets **by construction** — the legacy generator draws every client
+from one shared sequential RNG, so client ``n``'s data depends on the
+draws of clients ``< n`` and can never be regenerated per-id; ids at or
+beyond ``n_clients`` synthesize lazily from the registry's per-id
+``data_seed`` stream (Dirichlet class mix + the same token sampler) and
+live in an LRU.  With ``registered == n_clients`` every id hits the
+legacy datasets and the identity cohort draws no RNG, which is what
+makes the binding bit-inert there.
+
+Known approximations at population scale (documented, not bugs): SS-OP
+channels stay slot-keyed (successive occupants of a slot share its
+seeded rotation), and the deadline/async schedulers' trust write-back
+attributes a straggler's verdict to its slot's *current* occupant — the
+in-flight update itself is pinned to the dispatch-time identity via
+:meth:`pin`.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro import telemetry as tm
+from repro.data.pipeline import CountingIterator, infinite_batches
+from repro.data.synthetic import ClientData, make_task, sample_examples
+from repro.population.registry import ClientRegistry
+from repro.population.sampler import CohortSampler, PopulationConfig
+
+
+class _IterProxy:
+    """``iters[slot]`` -> the current occupant's batch stream."""
+
+    __slots__ = ("_pop",)
+
+    def __init__(self, pop: "PopulationRuntime"):
+        self._pop = pop
+
+    def __getitem__(self, slot: int) -> CountingIterator:
+        return self._pop.iter_for(int(self._pop.slot_to_id[slot]))
+
+
+class PopulationRuntime:
+    """One federation's registry-backed population (docs/population.md)."""
+
+    def __init__(self, federation, cfg: PopulationConfig):
+        fed = federation.fed
+        if cfg.registered < fed.n_clients:
+            raise ValueError(
+                f"registered population ({cfg.registered}) must be >= the "
+                f"federation's slot count (n_clients={fed.n_clients})")
+        if cfg.cohort is not None and cfg.cohort != fed.n_clients:
+            raise ValueError(
+                f"cohort must equal the federation's n_clients slot count "
+                f"({fed.n_clients}); got {cfg.cohort} — resize n_clients "
+                "to change the per-round cohort")
+        self.federation = federation
+        self.cfg = cfg
+        self.cohort = fed.n_clients
+        adapter_dim = 0
+        if cfg.store_adapters:
+            import jax
+            adapter_dim = int(sum(
+                np.prod(leaf.shape)
+                for leaf in jax.tree_util.tree_leaves(federation.lora0)))
+        self.adapter_dim = adapter_dim
+        self.registry = ClientRegistry(
+            cfg.registered, adapter_dim=adapter_dim,
+            shard_rows=cfg.shard_rows, adapter_dtype=cfg.adapter_dtype,
+            seed=fed.seed)
+        self.sampler = CohortSampler(self.registry, cfg)
+        self.slot_to_id = np.arange(self.cohort, dtype=np.int64)
+        self.iters = _IterProxy(self)
+        cap = cfg.data_cache or max(4 * self.cohort, 64)
+        self._cache_cap = max(cap, self.cohort)
+        self._data: "OrderedDict[int, ClientData]" = OrderedDict()
+        self._iters: "OrderedDict[int, CountingIterator]" = OrderedDict()
+        self._class_p = None           # synthesized-task unigrams, lazy
+        self._inflight: Dict[int, int] = {}     # slot -> pinned id
+        self._round_ids: Optional[np.ndarray] = None
+
+    # -- per-client data ------------------------------------------------------
+    def data_for(self, cid: int) -> ClientData:
+        fed = self.federation
+        if cid < fed.fed.n_clients:
+            return fed.data[cid]
+        d = self._data.get(cid)
+        if d is None:
+            d = self._synthesize(cid)
+            self._data[cid] = d
+            while len(self._data) > self._cache_cap:
+                self._data.popitem(last=False)
+        else:
+            self._data.move_to_end(cid)
+        return d
+
+    def _synthesize(self, cid: int) -> ClientData:
+        """Per-id dataset from the registry data-seed stream: its own
+        Dirichlet class mix + the shared class-conditional unigrams, so
+        synthesized clients match the §IV.A heterogeneity model without
+        the legacy generator's sequential cross-client RNG coupling."""
+        fed = self.federation
+        task = fed.task
+        if self._class_p is None:
+            self._class_p = make_task(task)
+        rng = np.random.default_rng(int(self.registry.data_seed[cid]))
+        props = rng.dirichlet([fed.fed.alpha] * task.num_classes)
+        n_ex = max(8, fed.fed.total_examples // fed.fed.n_clients)
+        labels = rng.choice(task.num_classes, size=n_ex, p=props)
+        tokens = sample_examples(task, self._class_p, labels, rng)
+        return ClientData(tokens=tokens, labels=labels.astype(np.int32))
+
+    def iter_for(self, cid: int) -> CountingIterator:
+        it = self._iters.get(cid)
+        if it is None:
+            fed = self.federation
+            d = self.data_for(cid)
+            it = CountingIterator(infinite_batches(
+                d.tokens, d.labels, fed.fed.batch_size,
+                seed=fed.fed.seed + 100 + cid))
+            it.fast_forward(int(self.registry.draws[cid]))
+            self._iters[cid] = it
+            while len(self._iters) > self._cache_cap:
+                old_cid, old_it = self._iters.popitem(last=False)
+                self.registry.draws[old_cid] = old_it.count
+        else:
+            self._iters.move_to_end(cid)
+        return it
+
+    def slot_weight(self, slot: int) -> int:
+        """FedAvg weight of the slot's current occupant."""
+        return len(self.data_for(int(self.slot_to_id[slot])).tokens)
+
+    # -- round lifecycle ------------------------------------------------------
+    def after_assign(self, groups: Dict[int, List[int]]) -> None:
+        """Seed registry columns from the clustering phase: the
+        bootstrap cohort (ids 0..n_clients-1 in identity slots) carries
+        its fingerprint-clustered edge assignment and the ledger's
+        clustering-time trust into the registry."""
+        fed = self.federation
+        n = fed.fed.n_clients
+        boot = np.arange(n, dtype=np.int64)
+        self.registry.scatter(boot, trust=fed.trust_ledger.scores[:n])
+        for k, members in groups.items():
+            if members:
+                m = np.asarray(members, np.int64)
+                self.registry.scatter(m, edge=np.full(len(m), k, np.int32),
+                                      cluster=np.full(len(m), k, np.int32))
+
+    def begin_round(self, round_idx: int,
+                    t: Optional[float] = None) -> np.ndarray:
+        """Sample the cohort, install the slot->id map, load trust."""
+        ids = self.sampler.sample(round_idx, self.cohort, t=t)
+        self.slot_to_id = ids
+        self._round_ids = ids
+        # registry trust -> slot ledger (float64 copies round-trip
+        # exactly, so the identity cohort is bit-inert)
+        self.federation.trust_ledger.scores = \
+            self.registry.trust[ids].copy()
+        if tm.enabled():
+            tm.set_gauge("population.registered", self.registry.registered)
+            tm.set_gauge("population.eligible", self.sampler.last_eligible)
+            tm.set_gauge("population.sampled", len(ids))
+            tm.set_gauge("population.registry_bytes", self.registry.nbytes)
+        return ids
+
+    def note_updates(self, slots: Sequence[int], trees: Sequence,
+                     base, ids: Optional[Sequence[int]] = None) -> None:
+        """Scatter trained LoRA deltas (vs the dispatch model ``base``)
+        into the registry's sharded adapter column."""
+        if self.adapter_dim == 0 or not len(trees):
+            return
+        if ids is None:
+            ids = [int(self.slot_to_id[s]) for s in slots]
+        base_flat = self._flatten(base)
+        mat = np.stack([self._flatten(t) - base_flat for t in trees])
+        self.registry.scatter_adapters(np.asarray(ids, np.int64), mat)
+
+    @staticmethod
+    def _flatten(tree) -> np.ndarray:
+        import jax
+        return np.concatenate([
+            np.asarray(leaf, np.float64).ravel()
+            for leaf in jax.tree_util.tree_leaves(tree)])
+
+    def end_round(self, round_idx: int) -> None:
+        """Scatter the round's outcomes back into the registry."""
+        ids = self._round_ids
+        if ids is None:
+            return
+        reg = self.registry
+        ledger = self.federation.trust_ledger
+        reg.scatter(ids, trust=ledger.scores[:len(ids)])
+        prev = reg.last_round[ids]
+        age = np.where(prev >= 0, round_idx - prev, 0).astype(np.float64)
+        b = self.cfg.staleness_beta
+        reg.staleness_ema[ids] = b * reg.staleness_ema[ids] + (1 - b) * age
+        reg.last_round[ids] = round_idx
+        reg.participations[ids] += 1
+        for cid in ids:
+            cid = int(cid)
+            it = self._iters.get(cid)
+            if it is not None:
+                reg.draws[cid] = it.count
+            d = self._data.get(cid)
+            if d is not None or cid < self.federation.fed.n_clients:
+                reg.n_examples[cid] = len(self.data_for(cid).tokens)
+        if tm.enabled():
+            tm.set_gauge("population.registry_bytes", reg.nbytes)
+            tm.set_gauge("population.adapter_shards",
+                         reg.allocated_shards)
+
+    # -- in-flight identity (deadline/async stragglers) -----------------------
+    def pin(self, slot: int) -> int:
+        """Record the slot's occupant at dispatch time, so a straggler
+        completing after a cohort swap still writes back under the
+        identity that trained it."""
+        cid = int(self.slot_to_id[slot])
+        self._inflight[slot] = cid
+        return cid
+
+    def pinned(self, slot: int) -> int:
+        return self._inflight.get(int(slot), int(self.slot_to_id[slot]))
+
+    def sync_draws(self) -> None:
+        """Persist every live iterator cursor into the registry (called
+        before checkpointing)."""
+        for cid, it in self._iters.items():
+            self.registry.draws[cid] = it.count
+
+    # -- checkpoint plumbing --------------------------------------------------
+    def state(self) -> Dict:
+        self.sync_draws()
+        return {
+            "registered": self.cfg.registered,
+            "seed": self.cfg.seed,
+            "strategy": self.cfg.strategy,
+            "registry": self.registry.state(),
+            "slot_to_id": np.asarray(self.slot_to_id, np.int64),
+        }
+
+    def load_state(self, state: Dict) -> None:
+        for field in ("registered", "seed", "strategy"):
+            if state[field] != getattr(self.cfg, field):
+                raise ValueError(
+                    f"population {field} mismatch: checkpoint has "
+                    f"{state[field]!r}, this run {getattr(self.cfg, field)!r}")
+        self.registry.load_state(state["registry"])
+        self.slot_to_id = np.asarray(state["slot_to_id"], np.int64).copy()
+        self._data.clear()
+        self._iters.clear()
+        self._inflight.clear()
+        self._round_ids = None

@@ -95,7 +95,7 @@ class EdgeRuntime:
     def run(self, method: str = "elsa", *, global_rounds: int = 10,
             steps_per_round: int = 4, eval_every: int = 1,
             log: bool = False, checkpoint=None,
-            resume_from: Optional[str] = None) -> Dict:
+            resume_from: Optional[str] = None, population=None) -> Dict:
         from repro.runtime.schedulers import SCHEDULERS
         if (checkpoint is not None or resume_from is not None) \
                 and self.config.policy != "sync":
@@ -105,6 +105,10 @@ class EdgeRuntime:
             raise ValueError("checkpoint/resume is supported on the "
                              "'sync' runtime policy only, not "
                              f"{self.config.policy!r}")
+        # registry-backed population (docs/population.md): every policy
+        # samples a per-round (sync/deadline) or per-fusion-window
+        # (async) cohort of registered ids into the client slots
+        self.federation._bind_population(population)
         scheduler = SCHEDULERS[self.config.policy](self)
         history = scheduler.run(method, global_rounds, steps_per_round,
                                 eval_every, log, checkpoint=checkpoint,

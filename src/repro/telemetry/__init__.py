@@ -45,10 +45,12 @@ from repro.telemetry.collector import (DEFAULT_TIME_BUCKETS, NULL_SPAN,
                                        SCHEMA_VERSION, Histogram, NullSpan,
                                        Telemetry, flat_key)
 from repro.telemetry.export import export_jsonl, read_jsonl, summarize
+from repro.telemetry.sinks import JsonlSink, Sink, finalize_sink
 
 __all__ = [
     "DEFAULT_TIME_BUCKETS", "SCHEMA_VERSION", "Histogram", "NullSpan",
     "Telemetry", "flat_key", "export_jsonl", "read_jsonl", "summarize",
+    "Sink", "JsonlSink", "finalize_sink",
     "enabled", "enable", "disable", "get", "inc", "set_gauge", "observe",
     "span", "record_span", "end_round", "export", "summary", "session",
 ]
@@ -65,15 +67,26 @@ def get() -> Optional[Telemetry]:
     return _active
 
 
-def enable(meta: Optional[Dict[str, Any]] = None) -> Telemetry:
-    """Start a fresh collector (replacing any previous one)."""
+def enable(meta: Optional[Dict[str, Any]] = None, sink: Optional[Sink] = None,
+           retain_rounds: Optional[int] = None) -> Telemetry:
+    """Start a fresh collector (replacing any previous one).
+
+    ``sink`` streams every round record as it closes
+    (:mod:`repro.telemetry.sinks`); ``retain_rounds`` bounds the
+    in-memory round window.  Both default off — the in-memory path is
+    unchanged.
+    """
     global _active
-    _active = Telemetry(meta)
+    _active = Telemetry(meta, sink=sink, retain_rounds=retain_rounds)
     return _active
 
 
 def disable() -> None:
+    """Stop collecting; a streaming sink is flushed (trailing partial
+    round + run summary) and closed on the way out."""
     global _active
+    if _active is not None:
+        finalize_sink(_active)
     _active = None
 
 
@@ -129,16 +142,20 @@ def summary() -> Optional[Dict[str, Any]]:
 
 @contextlib.contextmanager
 def session(meta: Optional[Dict[str, Any]] = None,
-            jsonl: Optional[str] = None):
+            jsonl: Optional[str] = None, sink: Optional[Sink] = None,
+            retain_rounds: Optional[int] = None):
     """Enable for a block; export to ``jsonl`` (if given) on the way
-    out, then restore the previous collector (sessions nest)."""
+    out, then restore the previous collector (sessions nest).  A
+    ``sink`` streams rounds live instead and is flushed + closed on
+    exit (``retain_rounds`` bounds the in-memory window meanwhile)."""
     global _active
     prev = _active
-    tel = Telemetry(meta)
+    tel = Telemetry(meta, sink=sink, retain_rounds=retain_rounds)
     _active = tel
     try:
         yield tel
     finally:
         if jsonl is not None:
             export_jsonl(tel, jsonl)
+        finalize_sink(tel)
         _active = prev

@@ -127,10 +127,24 @@ NULL_SPAN = NullSpan()
 
 
 class Telemetry:
-    """One run's worth of counters/gauges/histograms/spans."""
+    """One run's worth of counters/gauges/histograms/spans.
 
-    def __init__(self, meta: Optional[Dict[str, Any]] = None):
+    ``sink`` (any :class:`repro.telemetry.sinks.Sink`) receives the meta
+    record now and every round record as it closes — streaming
+    observability for long runs.  ``retain_rounds`` bounds the in-memory
+    ``rounds`` window (oldest records are dropped once a sink — or
+    nobody — needs them); both default off, leaving the historical
+    in-memory behavior untouched.
+    """
+
+    def __init__(self, meta: Optional[Dict[str, Any]] = None,
+                 sink=None, retain_rounds: Optional[int] = None):
+        if retain_rounds is not None and retain_rounds < 0:
+            raise ValueError(f"retain_rounds must be >= 0, got "
+                             f"{retain_rounds}")
         self.meta = dict(meta or {})
+        self.sink = sink
+        self.retain_rounds = retain_rounds
         self.started = time.perf_counter()
         self.counters: Dict[str, float] = {}
         self.gauges: Dict[str, float] = {}
@@ -138,6 +152,9 @@ class Telemetry:
         self.rounds: List[Dict[str, Any]] = []
         self._spans: List[Dict[str, Any]] = []   # pending (open round)
         self._round_base: Dict[str, float] = {}  # counters at last boundary
+        if sink is not None:
+            sink.emit_meta({"type": "meta", "schema": SCHEMA_VERSION,
+                            "meta": dict(self.meta)})
 
     # -- recording ---------------------------------------------------------
     def inc(self, name: str, value: float = 1.0, **labels: Any) -> None:
@@ -183,21 +200,31 @@ class Telemetry:
                 if k == name or k.startswith(prefix)}
 
     # -- round lifecycle ---------------------------------------------------
-    def end_round(self, round_idx: int,
+    def end_round(self, round_idx: Optional[int],
                   sim_time_s: Optional[float] = None) -> Dict[str, Any]:
         """Close one round: counter deltas since the previous boundary +
-        the spans recorded inside it become one JSONL-able record."""
+        the spans recorded inside it become one JSONL-able record.
+        ``round_idx=None`` marks an unnumbered trailing record (the
+        ``flush_pending`` fold) — a streaming sink must see the same
+        ``round: null`` the exporter writes."""
         delta = {k: v - self._round_base.get(k, 0.0)
                  for k, v in self.counters.items()
                  if v != self._round_base.get(k, 0.0)}
         self._round_base = dict(self.counters)
-        rec: Dict[str, Any] = {"type": "round", "round": int(round_idx),
+        rec: Dict[str, Any] = {"type": "round",
+                               "round": (None if round_idx is None
+                                         else int(round_idx)),
                                "counters": delta,
                                "gauges": dict(self.gauges),
                                "spans": self._spans}
         if sim_time_s is not None:
             rec["sim_time_s"] = float(sim_time_s)
+        if self.sink is not None:
+            self.sink.emit_round(rec)
         self.rounds.append(rec)
+        if self.retain_rounds is not None \
+                and len(self.rounds) > self.retain_rounds:
+            del self.rounds[:len(self.rounds) - self.retain_rounds]
         self._spans = []
         return rec
 
@@ -209,5 +236,4 @@ class Telemetry:
         if self._spans or any(
                 v != self._round_base.get(k, 0.0)
                 for k, v in self.counters.items()):
-            rec = self.end_round(-1)
-            rec["round"] = None
+            self.end_round(None)

@@ -1,0 +1,492 @@
+"""Registry-backed population (docs/population.md).
+
+Four layers of coverage:
+
+1. Pure units: :class:`ClientRegistry` gather/scatter (a scatter touches
+   exactly its rows, every other row stays bitwise intact), lazy adapter
+   sharding, the splitmix64 data-seed column, :class:`CohortSampler`
+   strategies + eligibility filters, and :class:`AvailabilityCursors`
+   against a brute-force interval check.
+2. The churn-trace versions: v1 is golden-anchored bit-exactly (old
+   seeds stay reproducible), v2 is structurally valid + deterministic
+   and shares v1's churny-client selection.
+3. Bit-identity: ``population=PopulationConfig(registered=n_clients)``
+   reproduces the legacy dict path's history exactly — on the plain
+   loop, on the sync runtime policy, and against the pre-refactor
+   golden (``tests/golden/bert_parity.json``).
+4. Population-scale runs: sampled cohorts on all three scheduler
+   policies, registry write-backs, checkpoint/resume (including the
+   presence-mismatch errors), telemetry ``population.*`` gauges, and a
+   sharded-mesh smoke (skipped below 2 devices).
+"""
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+import repro.checkpoint.federation as fedckpt
+from repro import telemetry as tm
+from repro.checkpoint import CheckpointConfig, tree_equal
+from repro.data.pipeline import CountingIterator, infinite_batches
+from repro.federation.simulation import FedConfig, Federation
+from repro.federation.topology import make_churn_trace
+from repro.population import (AvailabilityCursors, ClientRegistry,
+                              CohortSampler, PopulationConfig,
+                              PopulationRuntime)
+from repro.population.registry import SCALAR_COLUMNS, mix64
+from repro.runtime import RuntimeConfig
+
+TINY = dict(n_clients=4, n_edges=2, alpha=5.0, poisoned=(),
+            total_examples=200, probe_q=8, local_warmup_steps=1,
+            layers=4, t_rounds=1, batch_size=8, seed=0, seq_len=16,
+            num_classes=4, use_channel=False)
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                      "bert_parity.json")
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_registry_defaults_and_data_seed_column():
+    reg = ClientRegistry(100, adapter_dim=6, shard_rows=16, seed=3)
+    for name, dt, fill in SCALAR_COLUMNS:
+        col = getattr(reg, name)
+        assert col.dtype == np.dtype(dt) and len(col) == 100
+        if name != "data_seed":
+            assert (col == fill).all()
+    # splitmix64 data seeds: deterministic in (id, seed), all distinct
+    np.testing.assert_array_equal(reg.data_seed,
+                                  mix64(np.arange(100), salt=3))
+    assert len(np.unique(reg.data_seed)) == 100
+    reg2 = ClientRegistry(100, seed=4)
+    assert (reg.data_seed != reg2.data_seed).any()
+    with pytest.raises(ValueError):
+        ClientRegistry(0)
+    with pytest.raises(ValueError):
+        ClientRegistry(8, shard_rows=0)
+    with pytest.raises(AttributeError):
+        reg.not_a_column
+
+
+def test_registry_scatter_touches_exactly_its_rows():
+    rng = np.random.default_rng(0)
+    reg = ClientRegistry(50, adapter_dim=4, shard_rows=8)
+    before = {k: v.copy() for k, v in reg.columns.items()}
+    ids = rng.choice(50, 7, replace=False)
+    reg.scatter(ids, trust=rng.random(7), last_round=np.arange(7))
+    others = np.setdiff1d(np.arange(50), ids)
+    for name in reg.columns:
+        np.testing.assert_array_equal(reg.columns[name][others],
+                                      before[name][others])
+    got = reg.gather(ids, columns=("trust", "last_round"))
+    assert set(got) == {"trust", "last_round"}
+    np.testing.assert_array_equal(got["last_round"], np.arange(7))
+    with pytest.raises(IndexError):
+        reg.gather([50])
+    with pytest.raises(IndexError):
+        reg.scatter([-1], trust=[0.5])
+
+
+def test_registry_adapter_shards_allocate_lazily():
+    reg = ClientRegistry(40, adapter_dim=3, shard_rows=16)
+    assert reg.n_shards == 3 and reg.allocated_shards == 0
+    scalars = reg.nbytes
+    # reads never allocate: untouched rows are zero
+    np.testing.assert_array_equal(reg.gather_adapters([0, 17, 39]),
+                                  np.zeros((3, 3), np.float32))
+    assert reg.allocated_shards == 0 and reg.nbytes == scalars
+    # a scatter allocates exactly the shards it lands in (the tail
+    # shard is short: rows 32..39)
+    reg.scatter_adapters([1, 39], np.arange(6, dtype=np.float32)
+                         .reshape(2, 3))
+    assert reg.allocated_shards == 2
+    assert reg.has_adapter_shard(0) and reg.has_adapter_shard(2)
+    assert not reg.has_adapter_shard(1)
+    assert reg.nbytes == scalars + (16 + 8) * 3 * 4
+    got = reg.gather_adapters([39, 1, 2])
+    np.testing.assert_array_equal(got[0], [3.0, 4.0, 5.0])
+    np.testing.assert_array_equal(got[1], [0.0, 1.0, 2.0])
+    np.testing.assert_array_equal(got[2], np.zeros(3))
+    with pytest.raises(ValueError):
+        reg.scatter_adapters([1, 2], np.zeros((2, 4)))
+
+
+def test_registry_state_roundtrip_and_mismatch():
+    rng = np.random.default_rng(1)
+    reg = ClientRegistry(30, adapter_dim=5, shard_rows=8, seed=9)
+    reg.scatter(np.arange(10), trust=rng.random(10),
+                participations=rng.integers(0, 9, 10))
+    reg.scatter_adapters([3, 21], rng.random((2, 5)).astype(np.float32))
+    other = ClientRegistry(30, adapter_dim=5, shard_rows=8, seed=9)
+    other.load_state(reg.state())
+    for name in reg.columns:
+        np.testing.assert_array_equal(other.columns[name],
+                                      reg.columns[name])
+    assert other.allocated_shards == reg.allocated_shards
+    np.testing.assert_array_equal(other.gather_adapters(np.arange(30)),
+                                  reg.gather_adapters(np.arange(30)))
+    with pytest.raises(ValueError, match="registered"):
+        ClientRegistry(31, adapter_dim=5, shard_rows=8) \
+            .load_state(reg.state())
+    with pytest.raises(ValueError, match="shard_rows"):
+        ClientRegistry(30, adapter_dim=5, shard_rows=16) \
+            .load_state(reg.state())
+
+
+# ---------------------------------------------------------------------------
+# sampler
+# ---------------------------------------------------------------------------
+
+def _sampler(registered, **cfg_kw):
+    cfg = PopulationConfig(registered=registered, **cfg_kw)
+    return CohortSampler(ClientRegistry(registered), cfg)
+
+
+def test_config_validation():
+    with pytest.raises(ValueError, match="strategy"):
+        PopulationConfig(registered=8, strategy="lottery")
+    with pytest.raises(ValueError):
+        PopulationConfig(registered=0)
+    with pytest.raises(ValueError):
+        PopulationConfig(registered=8, staleness_beta=1.5)
+    with pytest.raises(ValueError, match="churn"):
+        PopulationConfig(registered=8,
+                         churn=make_churn_trace(4, 100.0, seed=0))
+
+
+def test_identity_fast_path_draws_no_rng():
+    s = _sampler(6, seed=5)
+    for g in (0, 1, 7):
+        np.testing.assert_array_equal(s.sample(g, 6), np.arange(6))
+    assert s.last_eligible == 6
+    with pytest.raises(ValueError, match="cohort"):
+        s.sample(0, 7)
+
+
+def test_uniform_sampling_is_stateless_and_round_keyed():
+    s = _sampler(100, seed=11)
+    a = s.sample(3, 10)
+    assert len(a) == 10 and len(np.unique(a)) == 10
+    assert a.min() >= 0 and a.max() < 100 and (np.diff(a) > 0).all()
+    # stateless: re-sampling the same round is a pure function
+    np.testing.assert_array_equal(a, _sampler(100, seed=11).sample(3, 10))
+    assert (a != s.sample(4, 10)).any()
+    assert (a != _sampler(100, seed=12).sample(3, 10)).any()
+
+
+def test_round_robin_covers_population():
+    s = _sampler(10, strategy="round-robin")
+    seen = set()
+    for g in range(5):
+        ids = s.sample(g, 4)
+        assert len(ids) == 4
+        seen.update(ids.tolist())
+    assert seen == set(range(10))
+
+
+def test_min_trust_filter_and_top_up():
+    s = _sampler(20, min_trust=0.5, seed=0)
+    s.registry.trust[:] = 0.1
+    good = np.array([2, 5, 11, 17])
+    s.registry.trust[good] = 0.9
+    # exactly enough eligible: the cohort is the eligible set
+    np.testing.assert_array_equal(s.sample(0, 4), good)
+    assert s.last_eligible == 4
+    # under-filled: tops up with the highest-trust ineligible clients
+    s.registry.trust[3] = 0.4
+    ids = s.sample(1, 6)
+    assert len(ids) == 6 and set(good) < set(ids.tolist()) \
+        and 3 in ids.tolist()
+
+
+def test_churn_filter_excludes_offline_clients():
+    trace = make_churn_trace(12, 400.0, mean_on_s=30.0, mean_off_s=30.0,
+                             seed=2)
+    s = _sampler(12, churn=trace, seed=0)
+    cursors = AvailabilityCursors(trace)
+    for t in (0.0, 50.0, 125.0, 300.0):
+        online = np.flatnonzero(cursors.online_mask(t))
+        if len(online) >= 4:
+            ids = s.sample(int(t), 4, t=t)
+            assert set(ids.tolist()) <= set(online.tolist())
+
+
+def test_availability_cursors_match_brute_force():
+    trace = make_churn_trace(30, 500.0, mean_on_s=20.0, mean_off_s=15.0,
+                             churn_frac=0.8, seed=4)
+    cur = AvailabilityCursors(trace)
+
+    def brute(t):
+        return np.array([not any(s <= t < e for s, e in iv)
+                         for iv in trace.offline])
+
+    ts = np.sort(np.random.default_rng(0).uniform(0, 600, 40))
+    for t in ts:                       # monotone (the O(1) fast path)
+        np.testing.assert_array_equal(cur.online_mask(t), brute(t))
+    np.testing.assert_array_equal(cur.online_mask(10.0), brute(10.0))
+    np.testing.assert_array_equal(cur.online_mask(450.0), brute(450.0))
+
+
+# ---------------------------------------------------------------------------
+# churn-trace versions
+# ---------------------------------------------------------------------------
+
+#: make_churn_trace(4, 200.0, seed=3, version=1) captured before the
+#: vectorized v2 landed — v1 must reproduce these bits forever.
+_CHURN_V1_GOLDEN = {
+    0: [[132.00888574688284, 138.8787621302493],
+        [154.34889351456215, 163.03982379588243],
+        [169.19541999812702, 189.21465133730075],
+        [193.19313370035783, 202.2183413554611]],
+    1: [[15.991882729581105, 41.69881185949355],
+        [72.65977579383542, 113.34488662778213],
+        [167.80506939727127, 197.50129201537754]],
+    2: [[10.663633437617165, 10.699624017463428],
+        [80.60112034307438, 98.48957510278525],
+        [171.46151081505906, 184.53332942022425]],
+    3: [[35.38829893028421, 47.06694670697417],
+        [49.547981189669066, 92.68543623829572],
+        [177.54756807554335, 178.85913618232942]],
+}
+
+
+def test_churn_v1_matches_golden():
+    tr = make_churn_trace(4, 200.0, seed=3, version=1)
+    for n, want in _CHURN_V1_GOLDEN.items():
+        np.testing.assert_allclose(tr.offline[n], np.asarray(want),
+                                   rtol=0, atol=0)
+
+
+def test_churn_v2_structure_and_determinism():
+    tr = make_churn_trace(200, 300.0, churn_frac=0.5, seed=7)
+    tr2 = make_churn_trace(200, 300.0, churn_frac=0.5, seed=7)
+    v1 = make_churn_trace(200, 300.0, churn_frac=0.5, seed=7, version=1)
+    # both versions draw the churny subset first from the same stream
+    churny = set(np.random.default_rng(7)
+                 .choice(200, 100, replace=False).tolist())
+    for n in range(200):
+        iv = tr.offline[n]
+        np.testing.assert_array_equal(iv, tr2.offline[n])
+        if n not in churny:
+            assert len(iv) == 0 and len(v1.offline[n]) == 0
+            continue
+        if len(iv) == 0:               # first on-dwell outran the horizon
+            continue
+        assert (iv[:, 1] > iv[:, 0]).all()         # non-empty intervals
+        assert (np.diff(iv[:, 0]) > 0).all()       # sorted starts
+        assert (iv[1:, 0] >= iv[:-1, 1]).all()     # non-overlapping
+        assert iv[0, 0] > 0 and iv[0, 0] < 300.0   # starts online
+    assert sum(len(tr.offline[n]) > 0 for n in churny) >= 90
+    with pytest.raises(ValueError):
+        make_churn_trace(4, 100.0, version=3)
+
+
+def test_churn_versions_same_distribution():
+    kw = dict(mean_on_s=40.0, mean_off_s=20.0, seed=1)
+    n1 = np.mean([len(iv) for iv in
+                  make_churn_trace(400, 600.0, version=1, **kw).offline])
+    n2 = np.mean([len(iv) for iv in
+                  make_churn_trace(400, 600.0, version=2, **kw).offline])
+    assert abs(n1 - n2) / n1 < 0.15, (n1, n2)
+
+
+# ---------------------------------------------------------------------------
+# bit-identity with the legacy dict path
+# ---------------------------------------------------------------------------
+
+def _history(population, runtime=None, **run_kw):
+    fed = Federation(FedConfig(**TINY), backend="batched")
+    h = fed.run("fedavg", global_rounds=2, steps_per_round=2,
+                runtime=runtime, population=population, **run_kw)
+    return fed, h
+
+
+def test_identity_population_is_bit_inert_plain_loop():
+    fed0, h0 = _history(None)
+    fed1, h1 = _history(PopulationConfig(registered=TINY["n_clients"]))
+    assert h0["accuracy"] == h1["accuracy"]
+    assert h0["loss"] == h1["loss"] and h0["delta"] == h1["delta"]
+    assert tree_equal(fed0.last_theta, fed1.last_theta)
+    # and the registry saw the rounds: everyone trained every round
+    reg = fed1._population.registry
+    assert (reg.participations == 2).all() and (reg.last_round == 1).all()
+
+
+def test_identity_population_is_bit_inert_sync_runtime():
+    fed0, h0 = _history(None, runtime=RuntimeConfig(policy="sync"))
+    fed1, h1 = _history(PopulationConfig(registered=TINY["n_clients"]),
+                        runtime=RuntimeConfig(policy="sync"))
+    assert h0["accuracy"] == h1["accuracy"] and h0["time"] == h1["time"]
+    assert h0["trace"].records == h1["trace"].records
+    assert tree_equal(fed0.last_theta, fed1.last_theta)
+
+
+def test_identity_population_matches_prerefactor_golden_config():
+    """Golden anchor, transitively: on the exact pre-refactor golden
+    config (``tests/golden/bert_parity.json`` — full elsa stack:
+    clustering, dynamic splits, SS-OP∘sketch channel, screening), an
+    identity population reproduces the legacy path's history bitwise.
+    ``test_split_api`` pins that legacy history to the golden file, so
+    wherever the environment reproduces the golden, this run does too."""
+    gold = json.load(open(GOLDEN))
+    kw = dict(gold["config"])
+    kw["layers"] = kw.pop("bert_layers")
+    kw["poisoned"] = tuple(kw.get("poisoned", ()))
+    run_kw = dict(global_rounds=gold["run"]["global_rounds"],
+                  steps_per_round=gold["run"]["steps_per_round"])
+    fed0 = Federation(FedConfig(**kw), backend="batched")
+    h0 = fed0.run(gold["run"]["method"], **run_kw)
+    fed1 = Federation(FedConfig(**kw), backend="batched")
+    h1 = fed1.run(gold["run"]["method"],
+                  population=PopulationConfig(registered=kw["n_clients"]),
+                  **run_kw)
+    assert h0["loss"] == h1["loss"]
+    assert h0["accuracy"] == h1["accuracy"]
+    assert h0["delta"] == h1["delta"]
+    assert h0["client_losses"] == h1["client_losses"]
+    np.testing.assert_array_equal(fed0.trust_ledger.scores,
+                                  fed1.trust_ledger.scores)
+    assert tree_equal(fed0.last_theta, fed1.last_theta)
+
+
+# ---------------------------------------------------------------------------
+# population-scale runs (registered > slots)
+# ---------------------------------------------------------------------------
+
+def test_population_run_updates_registry():
+    fed, h = _history(PopulationConfig(registered=12, seed=3))
+    assert np.isfinite(h["loss"]).all()
+    reg = fed._population.registry
+    # 2 rounds x 4 slots of participations, attributed to sampled ids
+    assert reg.participations.sum() == 8
+    trained = np.flatnonzero(reg.participations > 0)
+    assert (reg.last_round[trained] >= 0).all()
+    assert (reg.last_round[reg.participations == 0] == -1).all()
+    assert (reg.n_examples[trained] > 0).all()
+    # trained clients carry non-zero adapter deltas in the lazy column
+    assert fed._population.registry.allocated_shards >= 1
+    deltas = reg.gather_adapters(trained)
+    assert (np.abs(deltas).sum(axis=1) > 0).all()
+    # edge/cluster columns were seeded for the bootstrap cohort
+    assert (reg.edge[:TINY["n_clients"]] >= 0).all()
+
+
+def test_population_validation_against_federation():
+    fed = Federation(FedConfig(**TINY), backend="batched")
+    with pytest.raises(ValueError, match="registered"):
+        fed.run("fedavg", global_rounds=1,
+                population=PopulationConfig(registered=2))
+    with pytest.raises(ValueError, match="cohort"):
+        fed.run("fedavg", global_rounds=1,
+                population=PopulationConfig(registered=8, cohort=6))
+
+
+def test_synthesized_data_is_per_id_deterministic_and_lru_exact():
+    fed = Federation(FedConfig(**TINY), backend="batched")
+    pop = PopulationRuntime(fed, PopulationConfig(registered=40,
+                                                  data_cache=4))
+    # ids below n_clients reuse the legacy datasets by construction
+    assert pop.data_for(1) is fed.data[1]
+    d = pop.data_for(20)
+    assert len(d.tokens) == len(d.labels) > 0
+    pop2 = PopulationRuntime(fed, PopulationConfig(registered=40,
+                                                   data_cache=4))
+    np.testing.assert_array_equal(d.tokens, pop2.data_for(20).tokens)
+    np.testing.assert_array_equal(d.labels, pop2.data_for(20).labels)
+    # iterator streams survive LRU eviction bit-exactly: draw 3, evict
+    # by touching other ids, then the next draw matches an
+    # uninterrupted reference stream's 4th batch
+    it = pop.iter_for(20)
+    for _ in range(3):
+        next(it)
+    for cid in (21, 22, 23, 24, 25):
+        next(pop.iter_for(cid))
+    assert 20 not in pop._iters          # evicted; cursor in registry
+    assert pop.registry.draws[20] == 3
+    got = next(pop.iter_for(20))
+    ref = CountingIterator(infinite_batches(
+        d.tokens, d.labels, TINY["batch_size"], seed=TINY["seed"] + 120))
+    for _ in range(3):
+        next(ref)
+    want = next(ref)
+    np.testing.assert_array_equal(got[0], want[0])
+    np.testing.assert_array_equal(got[1], want[1])
+
+
+@pytest.mark.parametrize("policy", ["sync", "deadline", "async"])
+def test_population_runs_on_every_scheduler(policy):
+    fed, h = _history(PopulationConfig(registered=16, seed=1),
+                      runtime=RuntimeConfig(policy=policy))
+    assert np.isfinite(h["loss"]).all()
+    reg = fed._population.registry
+    assert reg.participations.sum() > 0
+    assert (reg.trust >= 0).all()
+
+
+def test_population_telemetry_gauges():
+    with tm.session() as tel:
+        _history(PopulationConfig(registered=12, seed=3))
+    assert tel.gauge("population.registered") == 12
+    assert tel.gauge("population.eligible") == 12
+    assert tel.gauge("population.sampled") == TINY["n_clients"]
+    assert tel.gauge("population.registry_bytes") > 0
+    assert tel.gauge("population.adapter_shards") >= 1
+
+
+# ---------------------------------------------------------------------------
+# checkpoint / resume
+# ---------------------------------------------------------------------------
+
+def test_population_checkpoint_resume_is_bit_identical(tmp_path):
+    d = str(tmp_path / "ck")
+    pop_kw = dict(registered=12, seed=3)
+    fedA, hA = _history(PopulationConfig(**pop_kw),
+                        checkpoint=CheckpointConfig(dir=d, keep=9))
+    fedB, hB = _history(PopulationConfig(**pop_kw),
+                        resume_from=fedckpt.round_path(d, 0))
+    assert hA["accuracy"] == hB["accuracy"]
+    assert hA["loss"] == hB["loss"] and hA["delta"] == hB["delta"]
+    assert tree_equal(fedA.last_theta, fedB.last_theta)
+    ra, rb = fedA._population.registry, fedB._population.registry
+    for name in ra.columns:
+        np.testing.assert_array_equal(ra.columns[name], rb.columns[name])
+    np.testing.assert_array_equal(
+        ra.gather_adapters(np.arange(12)),
+        rb.gather_adapters(np.arange(12)))
+
+
+def test_population_checkpoint_presence_mismatch(tmp_path):
+    d1, d2 = str(tmp_path / "a"), str(tmp_path / "b")
+    _history(None, checkpoint=CheckpointConfig(dir=d1, keep=9))
+    with pytest.raises(ValueError, match="population"):
+        _history(PopulationConfig(registered=12),
+                 resume_from=fedckpt.round_path(d1, 0))
+    _history(PopulationConfig(registered=12, seed=3),
+             checkpoint=CheckpointConfig(dir=d2, keep=9))
+    with pytest.raises(ValueError, match="population"):
+        _history(None, resume_from=fedckpt.round_path(d2, 0))
+    with pytest.raises(ValueError, match="registered"):
+        _history(PopulationConfig(registered=13, seed=3),
+                 resume_from=fedckpt.round_path(d2, 0))
+
+
+# ---------------------------------------------------------------------------
+# sharded mesh
+# ---------------------------------------------------------------------------
+
+@pytest.mark.skipif(len(jax.devices()) < 2,
+                    reason="needs >= 2 devices (XLA_FLAGS="
+                           "--xla_force_host_platform_device_count=8)")
+def test_population_on_sharded_mesh():
+    from repro.launch.mesh import make_federation_mesh
+    kw = dict(TINY, n_clients=8)
+    fed = Federation(FedConfig(**kw), backend="batched",
+                     mesh=make_federation_mesh())
+    h = fed.run("fedavg", global_rounds=2, steps_per_round=2,
+                population=PopulationConfig(registered=24, seed=5))
+    assert np.isfinite(h["loss"]).all()
+    assert fed._population.registry.participations.sum() == 16

@@ -60,8 +60,8 @@ def test_bucket_size_shard_multiples():
     assert bucket_size(9, 8) == 16
     assert bucket_size(17, 8) == 24
     assert bucket_size(5, 3) == 6
-    assert bucket_size(65, 8) == 80            # beyond the ladder
-    assert bucket_size(65, 6) == 96            # lcm(16, 6) granularity
+    assert bucket_size(65, 8) == 72            # beyond the ladder: next
+    assert bucket_size(65, 6) == 66            # multiple of n itself
     for mult in (2, 3, 4, 8):
         for n in (1, 7, 33, 100):
             s = bucket_size(n, mult)

@@ -246,7 +246,11 @@ def test_engine_bucket_ladder():
         s = bucket_size(n)
         assert s >= n and s in BUCKET_LADDER
         assert (s - n) / n <= 0.25 + 1e-9                  # bounded waste
-    assert bucket_size(65) == 80 and bucket_size(100) == 112
+    # beyond the ladder's top entry: the next shard-multiple of n itself
+    # (the old lcm(16, multiple) stepping over-padded, e.g. 65 -> 80)
+    assert bucket_size(65) == 65 and bucket_size(100) == 100
+    assert bucket_size(65, 3) == 66 and bucket_size(100, 8) == 104
+    assert bucket_size(9, 3) == 12                         # ladder + multiple
 
 
 def test_engine_padded_cohorts_share_one_compile_and_stay_exact():

@@ -348,3 +348,84 @@ def test_report_main_prints(capsys):
         sys.argv = argv
     out = capsys.readouterr().out
     assert "telemetry summary" in out and "phase" in out
+
+
+# ---------------------------------------------------------------------------
+# streaming sinks (docs/observability.md)
+# ---------------------------------------------------------------------------
+
+def _fill(tel, rounds, spans_per_round=2):
+    for g in range(rounds):
+        tel.inc("x.events", 3)
+        for s in range(spans_per_round):
+            tel.record_span("phase", dur_s=0.01, idx=s)
+        tel.end_round(g)
+
+
+def test_jsonl_sink_streams_rounds_live(tmp_path):
+    """Every completed round is on disk the moment it closes (a killed
+    run loses at most the open round), and close() appends the
+    summary so the file parses like an exported JSONL."""
+    p = str(tmp_path / "t.jsonl")
+    sink = tm.JsonlSink(p)
+    tel = tm.Telemetry({"bench": "sink"}, sink=sink)
+    _fill(tel, 3)
+    lines = [json.loads(l) for l in open(p)]
+    assert lines[0]["type"] == "meta" and lines[0]["meta"] == {
+        "bench": "sink"}
+    assert [l["round"] for l in lines[1:]] == [0, 1, 2]
+    tm.finalize_sink(tel)
+    d = tm.read_jsonl(p)
+    assert len(d["rounds"]) == 3
+    assert d["summary"]["counters"]["x.events"] == 9
+    sink.close()                                   # idempotent
+
+
+def test_jsonl_sink_rotation_parts_parse_standalone(tmp_path):
+    p = str(tmp_path / "t.jsonl")
+    sink = tm.JsonlSink(p, rotate_bytes=600)
+    tel = tm.Telemetry({"bench": "rot"}, sink=sink)
+    _fill(tel, 12)
+    tm.finalize_sink(tel)
+    assert sink.parts >= 1
+    rounds_seen = []
+    for part in sink.rotated_paths() + [p]:
+        d = tm.read_jsonl(part)                    # meta line re-stamped
+        assert d["meta"]["meta"] == {"bench": "rot"}
+        rounds_seen += [r["round"] for r in d["rounds"]]
+    assert rounds_seen == list(range(12))          # nothing lost/reordered
+
+
+def test_retain_rounds_bounds_memory_not_disk(tmp_path):
+    p = str(tmp_path / "t.jsonl")
+    tel = tm.Telemetry(sink=tm.JsonlSink(p), retain_rounds=2)
+    _fill(tel, 8)
+    assert [r["round"] for r in tel.rounds] == [6, 7]   # window trimmed
+    tm.finalize_sink(tel)
+    assert len(tm.read_jsonl(p)["rounds"]) == 8          # disk complete
+    with pytest.raises(ValueError):
+        tm.Telemetry(retain_rounds=-1)
+    with pytest.raises(ValueError):
+        tm.JsonlSink(str(tmp_path / "x.jsonl"), rotate_bytes=-1)
+
+
+def test_session_with_sink_finalizes_on_exit(tmp_path):
+    p = str(tmp_path / "s.jsonl")
+    with tm.session(meta={"m": 1}, sink=tm.JsonlSink(p)) as tel:
+        tel.inc("a")
+        tel.end_round(0)
+        tel.inc("b")                               # trailing partial round
+    d = tm.read_jsonl(p)
+    assert len(d["rounds"]) == 2 and d["rounds"][1]["round"] is None
+    assert d["summary"]["counters"] == {"a": 1.0, "b": 1.0}
+    assert tm.get() is None                        # previous state restored
+
+
+def test_no_sink_path_is_unchanged():
+    """The default in-memory collector never references a sink: runs
+    without one keep the historical behavior bit-for-bit."""
+    tel = tm.Telemetry()
+    _fill(tel, 2)
+    assert tel.sink is None and len(tel.rounds) == 2
+    tm.finalize_sink(tel)                          # no-op without a sink
+    assert len(tel.rounds) == 2                    # no flush side-effect
