@@ -25,6 +25,16 @@ Headline gate metric (``check_regression.py``): the round-time ratio
 ``round_s_small_over_large`` between the 10^2 and 10^4 populations —
 flat-to-sublinear scaling keeps it near 1.0; a registry that silently
 goes O(N) per round drags it toward 0.
+
+A second arm re-runs the *largest* population with the SS-OP privacy
+channel enabled.  Identity-keyed channels live in a bounded LRU on the
+population runtime (docs/population.md): with a cohort streaming fresh
+identities every round, nearly every dispatch misses the cache and
+regenerates its rotation (one seeded QR against the shared reference
+basis).  ``round_s_nochannel_over_channel`` gates that regeneration
+cost (``population_channel_overhead``): cheap per-identity rotations
+keep the ratio near 1.0; a regeneration blowup (e.g. a per-miss SVD or
+probe forward) drags it toward 0.
 """
 import os
 
@@ -53,8 +63,8 @@ SHARD_ROWS = 8
 ADAPTER_DTYPE = "float16"
 
 
-def _run_one(registered: int, rounds: int, tel) -> dict:
-    fed = Federation(FedConfig(**BASE), backend="batched")
+def _run_one(registered: int, rounds: int, tel, **overrides) -> dict:
+    fed = Federation(FedConfig(**{**BASE, **overrides}), backend="batched")
     pop_cfg = PopulationConfig(registered=registered, seed=17,
                                shard_rows=SHARD_ROWS,
                                adapter_dtype=ADAPTER_DTYPE)
@@ -79,6 +89,10 @@ def _run_one(registered: int, rounds: int, tel) -> dict:
         "adapter_shards_total": reg.n_shards,
         "eligible": int(tel.gauge("population.eligible") or 0),
         "sampled": int(tel.gauge("population.sampled") or 0),
+        "channel_cache_hits": int(
+            tel.gauge("population.channel_cache_hits") or 0),
+        "channel_cache_misses": int(
+            tel.gauge("population.channel_cache_misses") or 0),
         "final_accuracy": float(hist["final_accuracy"]),
     }
 
@@ -98,11 +112,19 @@ def run(quick: bool = False, write: bool = True, out: str = None):
                  f"registry_mib={r['registry_mib']:.2f} "
                  f"shards={r['adapter_shards_allocated']}"
                  f"/{r['adapter_shards_total']}")
+        # channel-overhead arm: the largest population again, SS-OP
+        # channel on — each fresh identity's rotation is an LRU miss
+        channel = _run_one(pops[-1], rounds, tel, use_channel=True)
+        emit(f"population_channel_{pops[-1]}", channel["round_s"] * 1e6,
+             f"round_s={channel['round_s']:.3f} "
+             f"cache_misses={channel['channel_cache_misses']} "
+             f"cache_hits={channel['channel_cache_hits']}")
 
     # flatness gate between the 10^2 and 10^4 arms (present in both
     # modes): flat scaling -> ratio ~1, O(N) rot -> ratio -> 0
     small = results["100"]["round_s"]
     large = results["10000"]["round_s"]
+    nochannel = results[str(pops[-1])]["round_s"]
     payload = {
         "config": {**{k: (list(v) if isinstance(v, tuple) else v)
                       for k, v in BASE.items()},
@@ -110,9 +132,12 @@ def run(quick: bool = False, write: bool = True, out: str = None):
                    "shard_rows": SHARD_ROWS,
                    "adapter_dtype": ADAPTER_DTYPE, "quick": quick},
         "populations": results,
+        "channel_arm": channel,
         "round_s_small_over_large": round(small / max(large, 1e-12), 4),
         "round_s_ratio_large_over_small": round(large / max(small, 1e-12),
                                                 4),
+        "round_s_nochannel_over_channel": round(
+            nochannel / max(channel["round_s"], 1e-12), 4),
         "max_registry_mib": round(max(r["registry_mib"]
                                       for r in results.values()), 3),
     }

@@ -80,6 +80,16 @@ GATES = (
               "ratio near 1.0, an O(registered) regression drags it "
               "toward 0; timing noise makes a committed-relative "
               "floor too brittle)"),
+    Gate("population_channel_overhead", "BENCH_population_scale.json",
+         lambda p: p["round_s_nochannel_over_channel"],
+         quick_floor=0.25, full_floor=0.4, committed_frac=None,
+         desc="no-channel / with-channel steady round time at the "
+              "largest population (identity-keyed SS-OP channels of "
+              "docs/population.md: fresh cohorts miss the channel LRU "
+              "nearly every round, so a rotation-regeneration blowup — "
+              "a per-miss SVD or probe forward instead of a seeded "
+              "QR — drags the ratio toward 0; timing noise makes a "
+              "committed-relative floor too brittle)"),
     Gate("fault_screening_gap", "BENCH_fault_tolerance.json",
          lambda p: -p["max_screened_gap"],
          quick_floor=-0.10, full_floor=-0.05, committed_frac=None,

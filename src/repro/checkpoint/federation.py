@@ -137,7 +137,11 @@ def build_state(fed, *, method: str, steps_per_round: int, round_idx: int,
     ``population`` the registry carries the draw cursors instead (slots
     have no fixed occupant), so ``draws`` is stored empty and the full
     registry snapshot rides in the optional ``population`` section —
-    legacy checkpoints without it keep loading unchanged.
+    legacy checkpoints without it keep loading unchanged.  Channels
+    follow the same split: identity-keyed channels of a bound
+    population live in its LRU (serialized inside the ``population``
+    section), so the top-level slot-keyed ``channels`` section is empty
+    there; without a population it carries ``fed._channels`` as before.
     """
     ssops = []
     for n in sorted(fed._channels):
@@ -254,7 +258,15 @@ def restore_run(fed, state: Dict, *, method: str, steps_per_round: int,
         ssop = None if ss is None else SSOP(u=ss["u"], v=ss["v"],
                                             w=ss["w"], w_inv=ss["w_inv"])
         plan = fed.plan if fed.fed.use_channel else None
-        fed._channels[int(n)] = Channel(ssop, plan)
+        if population is not None:
+            # legacy population snapshot with slot-keyed channels: those
+            # were built once at profile time, when slot n was occupied
+            # by identity n, so adopting them identity-keyed is exact
+            # (new snapshots carry the LRU inside the population section
+            # and leave this top-level section empty)
+            population.adopt_channel(int(n), Channel(ssop, plan))
+        else:
+            fed._channels[int(n)] = Channel(ssop, plan)
     if state["ledger"] is not None and hasattr(fed, "trust_ledger"):
         fed.trust_ledger.load_state({
             k: (np.asarray(v) if k != "beta" else v)

@@ -52,12 +52,27 @@ def random_orthogonal(r: int, seed: int) -> jnp.ndarray:
     return jnp.asarray(q, jnp.float32)
 
 
-def make_ssop(j_matrix: jnp.ndarray, r: int, salt: str,
-              client_id: int) -> SSOP:
-    u = semantic_subspace(j_matrix, r)
+def make_ssop_from_basis(u: jnp.ndarray, salt: str,
+                         client_id: int) -> SSOP:
+    """SSOP from a precomputed semantic basis ``U``.
+
+    Only the seeded ``V_n`` rotation is per-identity (Eq. 18 keys it on
+    the client id, not on the execution slot), so callers that manage
+    many identities over one shared basis — the population channel LRU —
+    pay the SVD once and a (r, r) QR per identity.  The seed depends on
+    nothing but ``(salt, client_id)``, which is what makes an evicted
+    identity's rotation regenerate bit-exactly.
+    """
+    r = u.shape[1]
     v = random_orthogonal(r, client_seed(salt, client_id))
     eye = jnp.eye(r, dtype=v.dtype)
     return SSOP(u=u, v=v, w=v.T - eye, w_inv=v - eye)
+
+
+def make_ssop(j_matrix: jnp.ndarray, r: int, salt: str,
+              client_id: int) -> SSOP:
+    return make_ssop_from_basis(semantic_subspace(j_matrix, r), salt,
+                                client_id)
 
 
 def apply_ssop(h: jnp.ndarray, ssop: SSOP, *, use_kernel: bool = False

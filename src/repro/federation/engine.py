@@ -347,6 +347,13 @@ class BatchedEngine:
         while no registered model's LoRA pytree is integer-keyed.
         ``batches[n]`` is the client's pre-drawn list of ``steps``
         (tokens, labels) batches (its iterator order is preserved).
+        ``channels`` maps each cohort slot to the channel of the
+        *identity* occupying it this round (``Federation.group_steps``
+        resolves occupants through the population's identity-keyed
+        channel LRU; without a population, identity == slot) — the
+        engine stacks whatever per-slot SS-OPs it is handed, so the
+        privacy rotation inside a compiled bucket follows the client,
+        not the slot index.
         Returns ``{client: (updated lora tree, mean local loss)}``; the
         loss arrays of all buckets are fetched in a single host sync.
         Buckets are padded up to the next :data:`BUCKET_LADDER` size with

@@ -39,7 +39,7 @@ from repro.core import splitting as split_mod
 from repro.core.fingerprint import divergence_matrix, fingerprint
 from repro.core.sketch import make_plan
 from repro.core.split_training import Channel, Split, split_loss
-from repro.core.ssop import make_ssop
+from repro.core.ssop import make_ssop, make_ssop_from_basis, semantic_subspace
 from repro.core.trust import trust_scores
 from repro.data.pipeline import infinite_batches
 from repro.data.probe import make_probe_set
@@ -211,7 +211,11 @@ class Federation:
         self.plan = make_plan(d, fed.sketch_y, z, seed=fed.seed + 11)
 
         self._loss_grad_cache: Dict = {}
+        # identity-keyed channels (identity == slot without a bound
+        # population; with one, channel_for routes through the
+        # population's identity LRU and this dict stays empty)
         self._channels: Dict[int, Channel] = {}
+        self._ref_basis = None
         self._engine: Optional[BatchedEngine] = None
         self._probe_fn = None
         self._eval_fn = None
@@ -300,6 +304,13 @@ class Federation:
     def channel_for(self, client: int, lora, emb=None) -> Channel:
         """Lazily build the client's SS-OP∘sketch channel.
 
+        Channels are keyed by client *identity*: with a bound population
+        ``client`` is a slot index and the call resolves through the
+        population's identity-keyed channel LRU (the slot's occupant,
+        :meth:`~repro.population.PopulationRuntime.channel_for_slot`);
+        without one, identity == slot and the channel lives in the
+        legacy ``_channels`` dict.
+
         ``emb`` lets callers share one probe forward across clients that
         create their channels from the same lora (the probe embeddings
         depend only on (lora, probe), not the client; only the seeded
@@ -307,6 +318,8 @@ class Federation:
         """
         if not self.fed.use_channel:
             return Channel(None, None)
+        if self._population is not None:
+            return self._population.channel_for_slot(client)
         if client not in self._channels:
             if emb is None:
                 emb = self._probe_embeddings(lora)
@@ -318,6 +331,28 @@ class Federation:
     def _probe_embeddings(self, lora):
         return self.model.probe_repr(self.frozen, lora,
                                      jnp.asarray(self.probe))
+
+    def _reference_basis(self):
+        """Shared semantic basis for identity-keyed channels: top-r SVD
+        of the *reference model's* probe embeddings, computed once.  In
+        every golden-pinned path legacy channels are built from
+        ``lora0`` embeddings too (elsa profiles from ``lora0``; the
+        plain loops build lazily at round 0 where theta == ``lora0``),
+        so the fixed basis is what makes an identity cohort bit-inert —
+        and what makes an evicted identity's channel regenerate
+        bit-exactly regardless of when it returns."""
+        if self._ref_basis is None:
+            self._ref_basis = semantic_subspace(
+                self._probe_embeddings(self.lora0), self.fed.ssop_r)
+        return self._ref_basis
+
+    def _build_identity_channel(self, cid: int) -> Channel:
+        """One registered identity's channel: shared reference basis +
+        its own seeded rotation (Eq. 18 keyed on the id)."""
+        ss = (make_ssop_from_basis(self._reference_basis(), "elsa-salt",
+                                   cid)
+              if self.fed.use_ssop else None)
+        return Channel(ss, self.plan)
 
     # ------------------------------------------------------------------
     def _grad_fn(self, client: int, split: Split):
@@ -395,7 +430,8 @@ class Federation:
                   else (theta[clients[0]]
                         if len({id(theta[n]) for n in clients}) == 1
                         else None))
-        if self.fed.use_channel and shared is not None and \
+        if self.fed.use_channel and self._population is None and \
+                shared is not None and \
                 any(n not in self._channels for n in clients):
             emb = self._probe_embeddings(shared)
         channels = {n: self.channel_for(n, theta[n] if per_client
@@ -539,6 +575,19 @@ class Federation:
         return new_ks, {n: res[n][1] for n in all_active}
 
     # -- update screening (docs/robustness.md) -------------------------
+    def _screen_identities(self, clients):
+        """(ledger, keys) for one screening pass.  With a bound
+        population, verdicts are recorded against client *identities* —
+        each slot resolves to its pinned dispatch-time id, so a
+        straggler arriving after a cohort swap credits/blames the
+        identity that actually trained, never the slot's new occupant —
+        through the identity-keyed ledger facade.  Without one,
+        identity == slot and the slot ledger is used directly."""
+        if self._population is None:
+            return self.trust_ledger, list(clients)
+        pop = self._population
+        return pop.ledger_view, [pop.pinned(int(n)) for n in clients]
+
     def screened_aggregate(self, clients, trees, weights, base):
         """Edge aggregation with the optional screening stage.
 
@@ -555,8 +604,9 @@ class Federation:
                                           mode=self.fed.aggregate)
         from repro.core.screening import screen_and_aggregate
         from repro.federation.engine import screen_stats
+        ledger, keys = self._screen_identities(clients)
         out, report = screen_and_aggregate(
-            base, trees, weights, list(clients), self.trust_ledger,
+            base, trees, weights, keys, ledger,
             self.screening, mode=self.fed.aggregate, stats_fn=screen_stats)
         self.screen_log.append(report)
         return out
@@ -571,12 +621,13 @@ class Federation:
             return list(trees), list(weights)
         from repro.core.screening import screen_updates
         from repro.federation.engine import screen_stats
-        report = screen_updates(base, trees, weights, list(clients),
-                                self.trust_ledger, self.screening,
+        ledger, keys = self._screen_identities(clients)
+        report = screen_updates(base, trees, weights, keys,
+                                ledger, self.screening,
                                 stats_fn=screen_stats)
         self.screen_log.append(report)
         kept_trees = [trees[i] for i in report.kept]
-        kept_wts = [float(weights[i]) * self.trust_ledger.weight(clients[i])
+        kept_wts = [float(weights[i]) * ledger.weight(keys[i])
                     for i in report.kept]
         return kept_trees, kept_wts
 

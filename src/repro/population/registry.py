@@ -22,6 +22,12 @@ column              dtype      meaning
 ``avail_cursor``    int64      churn-trace interval cursor
                                (:class:`~repro.population.sampler.
                                AvailabilityCursors`)
+``screen_passes``   int64      screening verdicts credited to this
+                               identity that passed (attribution follows
+                               the pinned dispatch-time id, never the
+                               slot's current occupant)
+``screen_fails``    int64      screening verdicts credited to this
+                               identity that failed
 ==================  =========  ==============================================
 
 The LoRA adapter-delta column is a ``(registered, adapter_dim)`` matrix
@@ -55,6 +61,8 @@ SCALAR_COLUMNS = (
     ("data_seed", np.uint64, 0),
     ("n_examples", np.int64, 0),
     ("avail_cursor", np.int64, 0),
+    ("screen_passes", np.int64, 0),
+    ("screen_fails", np.int64, 0),
 )
 
 
@@ -201,6 +209,11 @@ class ClientRegistry:
                     f"registry {field} mismatch: checkpoint has "
                     f"{state[field]}, this registry {getattr(self, field)}")
         for name, col in self.columns.items():
+            if name not in state["columns"]:
+                # column added after the checkpoint was written: keep
+                # its freshly-initialized fill so pre-upgrade snapshots
+                # stay loadable
+                continue
             self.columns[name] = np.asarray(state["columns"][name],
                                             col.dtype).copy()
         self._adapter_shards = [None] * self.n_shards

@@ -27,12 +27,24 @@ live in an LRU.  With ``registered == n_clients`` every id hits the
 legacy datasets and the identity cohort draws no RNG, which is what
 makes the binding bit-inert there.
 
-Known approximations at population scale (documented, not bugs): SS-OP
-channels stay slot-keyed (successive occupants of a slot share its
-seeded rotation), and the deadline/async schedulers' trust write-back
-attributes a straggler's verdict to its slot's *current* occupant — the
-in-flight update itself is pinned to the dispatch-time identity via
-:meth:`pin`.
+Privacy channels and trust follow the *identity*, not the slot:
+
+- :meth:`channel_for_slot` resolves a slot to its occupant and serves
+  that identity's SS-OP channel from a bounded LRU.  The semantic basis
+  ``U`` (SVD of the reference model's probe embeddings) is shared and
+  computed once; the per-identity secret rotation ``V_n`` is seeded by
+  ``Hash(salt || id)`` (Eq. 18), so two identities streaming through the
+  same slot get distinct rotations and an evicted identity's channel
+  regenerates bit-exactly on return — the same cursor-free determinism
+  the data-stream LRU gets from ``fast_forward``;
+- :meth:`record_trust` / :meth:`trust_weight` attribute screening
+  verdicts to an identity: in-cohort ids go through the slot-level
+  :class:`~repro.core.screening.TrustLedger` (and mirror into the
+  registry ``trust`` column immediately), while a straggler whose slot
+  was re-assigned applies the same EMA directly to its registry row —
+  the slot's new occupant is never credited or blamed for work it did
+  not do.  ``screen_passes`` / ``screen_fails`` count per-identity
+  verdicts for audit.
 """
 from __future__ import annotations
 
@@ -42,6 +54,7 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from repro import telemetry as tm
+from repro.core.split_training import Channel
 from repro.data.pipeline import CountingIterator, infinite_batches
 from repro.data.synthetic import ClientData, make_task, sample_examples
 from repro.population.registry import ClientRegistry
@@ -58,6 +71,37 @@ class _IterProxy:
 
     def __getitem__(self, slot: int) -> CountingIterator:
         return self._pop.iter_for(int(self._pop.slot_to_id[slot]))
+
+
+class _IdentityLedger:
+    """Identity-keyed facade over the population's trust state, shaped
+    like a :class:`~repro.core.screening.TrustLedger` so
+    :func:`~repro.core.screening.screen_updates` /
+    ``screen_and_aggregate`` run unchanged with client *ids* in place of
+    slot indices: ``record`` routes through
+    :meth:`PopulationRuntime.record_trust` (ledger for in-cohort ids,
+    registry EMA for stragglers) and ``scores`` is the registry ``trust``
+    column itself — population-sized, always current because in-cohort
+    records mirror into it immediately."""
+
+    __slots__ = ("_pop",)
+
+    def __init__(self, pop: "PopulationRuntime"):
+        self._pop = pop
+
+    @property
+    def beta(self) -> float:
+        return self._pop.federation.trust_ledger.beta
+
+    @property
+    def scores(self) -> np.ndarray:
+        return self._pop.registry.trust
+
+    def record(self, cid: int, passed: bool) -> None:
+        self._pop.record_trust(cid, passed)
+
+    def weight(self, cid: int) -> float:
+        return self._pop.trust_weight(cid)
 
 
 class PopulationRuntime:
@@ -98,6 +142,17 @@ class PopulationRuntime:
         self._class_p = None           # synthesized-task unigrams, lazy
         self._inflight: Dict[int, int] = {}     # slot -> pinned id
         self._round_ids: Optional[np.ndarray] = None
+        self._id_to_slot: Dict[int, int] = {
+            i: i for i in range(self.cohort)}
+        # identity-keyed SS-OP channel LRU (shared U basis, per-id V_n;
+        # evictions regenerate bit-exactly from the identity's seed)
+        self._channel_cap = max(cfg.channel_cache or self._cache_cap,
+                                self.cohort)
+        self._channels: "OrderedDict[int, Channel]" = OrderedDict()
+        self._chan_hits = 0
+        self._chan_misses = 0
+        self._chan_evictions = 0
+        self.ledger_view = _IdentityLedger(self)
 
     # -- per-client data ------------------------------------------------------
     def data_for(self, cid: int) -> ClientData:
@@ -151,6 +206,67 @@ class PopulationRuntime:
         """FedAvg weight of the slot's current occupant."""
         return len(self.data_for(int(self.slot_to_id[slot])).tokens)
 
+    # -- identity-keyed SS-OP channels ----------------------------------------
+    def channel_for_slot(self, slot: int) -> Channel:
+        """The SS-OP channel of the slot's *current occupant* — the
+        privacy rotation travels with the identity, never the slot."""
+        return self.channel_for_id(int(self.slot_to_id[int(slot)]))
+
+    def channel_for_id(self, cid: int) -> Channel:
+        fed = self.federation
+        if not fed.fed.use_channel:
+            return Channel(None, None)
+        cid = int(cid)
+        ch = self._channels.get(cid)
+        if ch is None:
+            self._chan_misses += 1
+            ch = fed._build_identity_channel(cid)
+            self._channels[cid] = ch
+            while len(self._channels) > self._channel_cap:
+                self._channels.popitem(last=False)
+                self._chan_evictions += 1
+        else:
+            self._chan_hits += 1
+            self._channels.move_to_end(cid)
+        return ch
+
+    def adopt_channel(self, cid: int, channel: Channel) -> None:
+        """Install a deserialized channel (checkpoint restore) under its
+        identity, honoring the LRU bound."""
+        self._channels[int(cid)] = channel
+        self._channels.move_to_end(int(cid))
+        while len(self._channels) > self._channel_cap:
+            self._channels.popitem(last=False)
+
+    # -- identity-keyed trust attribution -------------------------------------
+    def record_trust(self, cid: int, passed: bool) -> None:
+        """Credit a screening verdict to the identity that trained the
+        update.  An in-cohort id records through the slot-level ledger
+        (same EMA floats as the legacy path, mirrored into the registry
+        immediately so reads stay current); a straggler whose slot was
+        handed to someone else applies the EMA to its own registry row —
+        the new occupant's trust is untouched."""
+        cid = int(cid)
+        reg = self.registry
+        slot = self._id_to_slot.get(cid)
+        if slot is not None:
+            ledger = self.federation.trust_ledger
+            ledger.record(slot, passed)
+            reg.trust[cid] = ledger.scores[slot]
+        else:
+            b = self.federation.trust_ledger.beta
+            reg.trust[cid] = b * reg.trust[cid] \
+                + (1.0 - b) * (1.0 if passed else 0.0)
+        if passed:
+            reg.screen_passes[cid] += 1
+        else:
+            reg.screen_fails[cid] += 1
+
+    def trust_weight(self, cid: int) -> float:
+        """The identity's current trust EMA (registry column; in-cohort
+        mirrors keep it bit-equal to the slot ledger)."""
+        return float(self.registry.trust[int(cid)])
+
     # -- round lifecycle ------------------------------------------------------
     def after_assign(self, groups: Dict[int, List[int]]) -> None:
         """Seed registry columns from the clustering phase: the
@@ -173,6 +289,7 @@ class PopulationRuntime:
         ids = self.sampler.sample(round_idx, self.cohort, t=t)
         self.slot_to_id = ids
         self._round_ids = ids
+        self._id_to_slot = {int(c): s for s, c in enumerate(ids)}
         # registry trust -> slot ledger (float64 copies round-trip
         # exactly, so the identity cohort is bit-inert)
         self.federation.trust_ledger.scores = \
@@ -229,6 +346,13 @@ class PopulationRuntime:
             tm.set_gauge("population.registry_bytes", reg.nbytes)
             tm.set_gauge("population.adapter_shards",
                          reg.allocated_shards)
+            tm.set_gauge("population.channel_cache_size",
+                         len(self._channels))
+            tm.set_gauge("population.channel_cache_hits", self._chan_hits)
+            tm.set_gauge("population.channel_cache_misses",
+                         self._chan_misses)
+            tm.set_gauge("population.channel_cache_evictions",
+                         self._chan_evictions)
 
     # -- in-flight identity (deadline/async stragglers) -----------------------
     def pin(self, slot: int) -> int:
@@ -251,15 +375,26 @@ class PopulationRuntime:
     # -- checkpoint plumbing --------------------------------------------------
     def state(self) -> Dict:
         self.sync_draws()
+        # cached identity channels ride along so a resume serves the
+        # exact same SS-OP bases without re-probing (an absent entry
+        # would regenerate bit-exactly anyway — the seeds live in the
+        # identity, not the snapshot)
+        chans = [[int(cid),
+                  None if ch.ssop is None else
+                  {"u": ch.ssop.u, "v": ch.ssop.v,
+                   "w": ch.ssop.w, "w_inv": ch.ssop.w_inv}]
+                 for cid, ch in self._channels.items()]
         return {
             "registered": self.cfg.registered,
             "seed": self.cfg.seed,
             "strategy": self.cfg.strategy,
             "registry": self.registry.state(),
             "slot_to_id": np.asarray(self.slot_to_id, np.int64),
+            "channels": chans,
         }
 
     def load_state(self, state: Dict) -> None:
+        from repro.core.ssop import SSOP
         for field in ("registered", "seed", "strategy"):
             if state[field] != getattr(self.cfg, field):
                 raise ValueError(
@@ -267,7 +402,20 @@ class PopulationRuntime:
                     f"{state[field]!r}, this run {getattr(self.cfg, field)!r}")
         self.registry.load_state(state["registry"])
         self.slot_to_id = np.asarray(state["slot_to_id"], np.int64).copy()
+        self._id_to_slot = {int(c): s
+                            for s, c in enumerate(self.slot_to_id)}
         self._data.clear()
         self._iters.clear()
         self._inflight.clear()
         self._round_ids = None
+        self._channels.clear()
+        plan = self.federation.plan \
+            if self.federation.fed.use_channel else None
+        # "channels" is absent from pre-identity-keying snapshots; those
+        # carried slot-keyed channels in the top-level checkpoint section
+        # instead (restore_run adopts them, slot == identity at the
+        # profile time they were built)
+        for cid, ss in state.get("channels", []):
+            ssop = None if ss is None else SSOP(
+                u=ss["u"], v=ss["v"], w=ss["w"], w_inv=ss["w_inv"])
+            self.adopt_channel(int(cid), Channel(ssop, plan))

@@ -53,6 +53,11 @@ class PopulationConfig:
     staleness_beta: float = 0.8        # staleness-EMA retention
     data_cache: int = 0                # synthesized-client LRU capacity;
                                        # 0 -> max(4 x cohort, 64)
+    channel_cache: int = 0             # identity SS-OP channel LRU
+                                       # capacity; 0 -> the data-cache
+                                       # default (evicted rotations
+                                       # regenerate bit-exactly from the
+                                       # identity's seed)
 
     def __post_init__(self):
         if self.strategy not in STRATEGIES:

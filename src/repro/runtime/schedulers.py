@@ -670,16 +670,30 @@ class AsyncScheduler(_SchedulerBase):
                     # screened alone (finite check) and trust-discounted;
                     # norm/direction screens need the batched cohorts of
                     # the sync/deadline paths (docs/robustness.md)
+                    from repro.core.screening import (LOW_TRUST,
+                                                      NONFINITE, OK)
                     from repro.federation.engine import screen_stats
                     fin, _, _ = screen_stats(edge_theta[k], [lora_n],
                                              [1.0])
                     ok = bool(fin[0])
-                    fed.trust_ledger.record(n, ok)
-                    score = float(fed.trust_ledger.scores[n])
+                    if self.pop is not None:
+                        # the verdict belongs to whoever trained the
+                        # update: the pinned dispatch-time identity,
+                        # not slot n's current occupant
+                        cid = self.pop.pinned(n)
+                        self.pop.record_trust(cid, ok)
+                        score = self.pop.trust_weight(cid)
+                    else:
+                        fed.trust_ledger.record(n, ok)
+                        score = float(fed.trust_ledger.scores[n])
                     if not ok or score < fed.screening.trust_floor:
                         folds = 0
-                    else:
-                        w = min(1.0, w * fed.trust_ledger.weight(n))
+                    if tm.enabled():
+                        v = NONFINITE if not ok else \
+                            (OK if folds else LOW_TRUST)
+                        tm.inc("screening.verdicts", 1, verdict=v)
+                    if folds:
+                        w = min(1.0, w * score)
                 if folds and self.pop is not None:
                     # write back under the dispatch-time identity (the
                     # cohort may have swapped since); delta base is the

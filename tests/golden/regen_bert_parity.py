@@ -1,0 +1,65 @@
+"""Re-record the BERT run-level parity goldens in the current
+environment.
+
+Run after an *intentional* container/toolchain upgrade (never to paper
+over an unexplained mismatch in an unchanged environment — that is the
+regression the goldens exist to catch)::
+
+    PYTHONPATH=src python tests/golden/regen_bert_parity.py
+
+Writes ``bert_parity.json`` (legacy factor-averaging aggregation) and
+``bert_parity_product.json`` (product-space aggregation), each stamped
+with the recording environment's fingerprint (``tests/golden_env.py``):
+a matching environment asserts the history at float precision, a
+drifted one falls back to tolerance bands.
+"""
+import json
+import os
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+sys.path.insert(0, os.path.join(HERE, "..", "..", "src"))
+sys.path.insert(0, os.path.join(HERE, ".."))
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from golden_env import fingerprint  # noqa: E402
+from repro.federation.simulation import FedConfig, Federation  # noqa: E402
+
+BASE = dict(n_clients=6, n_edges=2, alpha=0.2, poisoned=[4],
+            total_examples=600, probe_q=8, local_warmup_steps=2,
+            lr=0.02, layers=4, t_rounds=1, batch_size=16, seed=0)
+RUN = dict(method="elsa", global_rounds=2, steps_per_round=2)
+
+
+def record(config: dict) -> dict:
+    kw = dict(config)
+    kw["poisoned"] = tuple(kw["poisoned"])
+    fed = Federation(FedConfig(**kw), backend="batched")
+    h = fed.run(RUN["method"], global_rounds=RUN["global_rounds"],
+                steps_per_round=RUN["steps_per_round"])
+    sums = [float(np.asarray(l, np.float64).sum())
+            for l in jax.tree_util.tree_leaves(fed.last_theta)]
+    return {
+        "config": config,
+        "run": dict(RUN),
+        "env": fingerprint(),
+        "loss": [float(x) for x in h["loss"]],
+        "accuracy": [float(x) for x in h["accuracy"]],
+        "delta": [float(x) for x in h["delta"]],
+        "round": [int(r) for r in h["round"]],
+        "client_losses": {str(n): [float(x) for x in v]
+                          for n, v in h["client_losses"].items()},
+        "theta_leaf_sums": sums,
+    }
+
+
+if __name__ == "__main__":
+    for aggregate, fname in (("factor", "bert_parity.json"),
+                             ("product", "bert_parity_product.json")):
+        gold = record({**BASE, "aggregate": aggregate})
+        path = os.path.join(HERE, fname)
+        with open(path, "w") as f:
+            json.dump(gold, f)
+        print(f"wrote {path}: loss={gold['loss']} acc={gold['accuracy']}")

@@ -1,0 +1,39 @@
+"""Environment fingerprint for golden-history records.
+
+Golden histories pin *bit-level* reproducibility, but CPU f32 bits are
+only stable within one numerical environment: a jax/jaxlib upgrade
+changes XLA codegen (fusion, FMA contraction), the split-model gradient
+map is chaotic (parameter-Lipschitz ~1e5, docs/engine.md), and the
+recorded trajectories drift by ~1e-3 on a two-round horizon.  Each
+golden therefore carries the fingerprint of the environment it was
+recorded in: a matching environment asserts at float precision
+(atol 1e-9 ≈ bit-identical for f32), a drifted one falls back to a
+tolerance band that still catches wiring bugs (wrong method, broken
+aggregation, channel misrouting) without failing on codegen drift.
+
+Re-pin after an intentional container upgrade with::
+
+    PYTHONPATH=src python tests/golden/regen_bert_parity.py
+"""
+import platform
+import sys
+
+
+def fingerprint() -> dict:
+    import jax
+    import jaxlib
+    import numpy
+    return {
+        "jax": jax.__version__,
+        "jaxlib": jaxlib.__version__,
+        "numpy": numpy.__version__,
+        "python": "%d.%d" % sys.version_info[:2],
+        "machine": platform.machine(),
+        "backend": jax.default_backend(),
+    }
+
+
+def matches(recorded) -> bool:
+    """True when the current environment is the one the golden was
+    recorded in (goldens predating the fingerprint never match)."""
+    return recorded == fingerprint() if recorded else False

@@ -1,0 +1,222 @@
+"""Identity-keyed SS-OP channels and trust attribution
+(docs/population.md).
+
+The privacy rotation and the trust EMA must follow the registered
+*identity*, never the federation slot it happens to execute in:
+
+1. Property: a client's rotation is invariant under arbitrary slot
+   assignments and cohort schedules (seeded-random sweep always runs; a
+   hypothesis version runs where hypothesis is installed).
+2. Two identities streaming through the same slot across rounds get
+   *distinct* rotations; a returning identity gets its original
+   rotation bit-exactly after LRU eviction.
+3. Straggler attribution: a verdict for an update that completes after
+   a cohort swap lands on the pinned dispatch-time identity — the
+   slot's new occupant is never credited or blamed (deadline
+   ``screen_cohort`` path and the async per-arrival path, plus
+   end-to-end scheduler runs).
+4. The async scheduler emits ``screening.verdicts`` telemetry counters
+   (it was the one screening path that recorded none).
+"""
+import numpy as np
+import pytest
+
+from repro import telemetry as tm
+from repro.core.ssop import client_seed, random_orthogonal
+from repro.federation.simulation import FedConfig, Federation
+from repro.population import PopulationConfig, PopulationRuntime
+from repro.runtime import RuntimeConfig
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:       # container without hypothesis: seeded sweep only
+    HAVE_HYPOTHESIS = False
+
+CHAN = dict(n_clients=4, n_edges=2, alpha=5.0, poisoned=(),
+            total_examples=200, probe_q=8, local_warmup_steps=1,
+            layers=4, t_rounds=1, batch_size=8, seed=0, seq_len=16,
+            num_classes=4, use_channel=True)
+REGISTERED = 24
+
+
+@pytest.fixture(scope="module")
+def fed():
+    return Federation(FedConfig(**CHAN), backend="batched")
+
+
+def _pop(fed, **kw):
+    kw.setdefault("registered", REGISTERED)
+    pop = PopulationRuntime(fed, PopulationConfig(**kw))
+    fed._bind_population(pop)
+    return pop
+
+
+def _install(pop, assignment):
+    """Arbitrary cohort schedule: put ``assignment[s]`` in slot ``s``."""
+    pop.slot_to_id = np.asarray(assignment, np.int64)
+    pop._id_to_slot = {int(c): s for s, c in enumerate(assignment)}
+
+
+def _assert_rotation_is_identity_keyed(fed, pop, assignment):
+    ref_u = np.asarray(fed._reference_basis())
+    _install(pop, assignment)
+    for slot, cid in enumerate(assignment):
+        ch = fed.channel_for(slot, None)
+        want_v = np.asarray(random_orthogonal(
+            fed.fed.ssop_r, client_seed("elsa-salt", int(cid))))
+        np.testing.assert_array_equal(np.asarray(ch.ssop.v), want_v)
+        np.testing.assert_array_equal(np.asarray(ch.ssop.u), ref_u)
+
+
+def test_rotation_invariant_under_slot_assignment_seeded_sweep(fed):
+    pop = _pop(fed)
+    rng = np.random.default_rng(7)
+    for _ in range(25):
+        assignment = rng.choice(REGISTERED, size=CHAN["n_clients"],
+                                replace=False)
+        _assert_rotation_is_identity_keyed(fed, pop, assignment)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=30, deadline=None)
+    @given(st.lists(st.integers(0, REGISTERED - 1),
+                    min_size=CHAN["n_clients"],
+                    max_size=CHAN["n_clients"], unique=True))
+    def test_rotation_invariant_under_slot_assignment_hypothesis(
+            fed, assignment):
+        _assert_rotation_is_identity_keyed(fed, _pop(fed), assignment)
+
+
+def test_identities_sharing_a_slot_get_distinct_rotations(fed):
+    pop = _pop(fed)
+    _install(pop, [3, 1, 2, 0])
+    round0 = fed.channel_for(0, None)
+    _install(pop, [19, 1, 2, 0])          # slot 0 swaps 3 -> 19
+    round1 = fed.channel_for(0, None)
+    assert (np.asarray(round0.ssop.v) != np.asarray(round1.ssop.v)).any()
+    np.testing.assert_array_equal(np.asarray(round0.ssop.u),
+                                  np.asarray(round1.ssop.u))
+
+
+def test_returning_identity_rotation_bit_exact_after_eviction(fed):
+    pop = _pop(fed, channel_cache=4)
+    first = pop.channel_for_id(20)
+    want = {f: np.asarray(getattr(first.ssop, f))
+            for f in ("u", "v", "w", "w_inv")}
+    for cid in (5, 6, 7, 8, 9):           # cap 4: 20 falls off the LRU
+        pop.channel_for_id(cid)
+    assert 20 not in pop._channels
+    again = pop.channel_for_id(20)
+    assert again is not first             # regenerated, not cached
+    for f, ref in want.items():
+        np.testing.assert_array_equal(np.asarray(getattr(again.ssop, f)),
+                                      ref)
+
+
+def test_channel_cache_telemetry_gauges(fed):
+    with tm.session() as tel:
+        pop = _pop(fed, channel_cache=4)
+        for cid in (0, 1, 2, 3, 0, 9):    # 5 misses, 1 hit, 1 eviction
+            pop.channel_for_id(cid)
+        pop._round_ids = pop.slot_to_id
+        pop.end_round(0)
+    assert tel.gauge("population.channel_cache_size") == 4
+    assert tel.gauge("population.channel_cache_hits") == 1
+    assert tel.gauge("population.channel_cache_misses") == 5
+    assert tel.gauge("population.channel_cache_evictions") == 1
+
+
+# ---------------------------------------------------------------------------
+# straggler trust attribution
+# ---------------------------------------------------------------------------
+
+def _swap_out(pop, straggler, start=1):
+    """Advance the (deterministic) cohort schedule until the straggler
+    is out of the cohort entirely; returns the new slot-0 occupant."""
+    r = start
+    while straggler in {int(c) for c in pop.slot_to_id}:
+        pop.begin_round(r)
+        r += 1
+    return int(pop.slot_to_id[0])
+
+
+def test_straggler_verdict_lands_on_pinned_identity_deadline_path():
+    """The deadline write-back path: ``screen_cohort`` on a sender slot
+    resolves the verdict to the pinned dispatch-time identity."""
+    fed = Federation(FedConfig(**CHAN, screen=True), backend="batched")
+    pop = _pop(fed, seed=2)
+    pop.begin_round(0)
+    straggler = pop.pin(0)                # dispatched from round 0's cohort
+    newcomer = _swap_out(pop, straggler)  # cohort swapped mid-flight
+    assert newcomer != straggler
+    kept, _ = fed.screen_cohort([0], [fed.lora0], [1.0], fed.lora0)
+    assert len(kept) == 1                 # zero-delta update passes
+    reg = pop.registry
+    assert reg.screen_passes[straggler] == 1
+    assert reg.screen_passes[newcomer] == 0
+    assert reg.screen_fails[newcomer] == 0
+
+
+def test_straggler_verdict_lands_on_pinned_identity_async_path():
+    """The async per-arrival path: ``record_trust(pinned_id, ok)`` hits
+    the straggler's registry row, not the slot ledger of the new
+    occupant."""
+    fed = Federation(FedConfig(**CHAN, screen=True), backend="batched")
+    pop = _pop(fed, seed=2)
+    pop.begin_round(0)
+    straggler = pop.pin(0)
+    newcomer = _swap_out(pop, straggler)
+    assert newcomer != straggler
+    pop.record_trust(pop.pinned(0), False)   # nonfinite arrival, say
+    reg = pop.registry
+    beta = fed.trust_ledger.beta
+    assert reg.screen_fails[straggler] == 1
+    np.testing.assert_allclose(reg.trust[straggler], beta * 1.0)
+    # the new occupant is untouched, in registry and slot ledger alike
+    assert reg.trust[newcomer] == 1.0
+    assert reg.screen_fails[newcomer] == 0
+    assert fed.trust_ledger.scores[0] == 1.0
+
+
+def test_in_cohort_verdict_mirrors_ledger_and_registry():
+    fed = Federation(FedConfig(**CHAN, screen=True), backend="batched")
+    pop = _pop(fed, seed=2)
+    pop.begin_round(0)
+    cid = int(pop.slot_to_id[2])
+    pop.record_trust(cid, False)
+    assert pop.registry.trust[cid] == fed.trust_ledger.scores[2]
+    assert pop.registry.trust[cid] < 1.0
+    assert pop.registry.screen_fails[cid] == 1
+
+
+@pytest.mark.parametrize("policy", ["deadline", "async"])
+def test_scheduler_verdicts_attributed_to_dispatched_ids(policy):
+    """End-to-end: every identity carrying a screening verdict after a
+    deadline/async run was actually dispatched (pinned) at some point —
+    the slot-reuse bug attributed verdicts to whoever happened to hold
+    the slot at write-back."""
+    fed = Federation(FedConfig(**CHAN, screen=True), backend="batched")
+    pop = _pop(fed, registered=16, seed=1)
+    pins = []
+    orig_pin = pop.pin
+    pop.pin = lambda slot: (pins.append(orig_pin(slot)), pins[-1])[1]
+    h = fed.run("fedavg", global_rounds=2, steps_per_round=2,
+                runtime=RuntimeConfig(policy=policy), population=pop)
+    assert np.isfinite(h["loss"]).all()
+    reg = pop.registry
+    judged = reg.screen_passes + reg.screen_fails
+    assert judged.sum() > 0
+    assert set(np.flatnonzero(judged)) <= set(pins)
+
+
+def test_async_emits_screening_verdict_counters():
+    """PR 7 caveat closed: the async per-arrival screening path now
+    counts its verdicts, so telemetry reports are no longer blind."""
+    fed = Federation(FedConfig(**CHAN, screen=True), backend="batched")
+    with tm.session() as tel:
+        fed.run("fedavg", global_rounds=2, steps_per_round=2,
+                runtime=RuntimeConfig(policy="async"))
+    counts = tel.counters_by_name("screening.verdicts")
+    assert sum(counts.values()) > 0

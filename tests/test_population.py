@@ -334,7 +334,8 @@ def test_identity_population_matches_prerefactor_golden_config():
     wherever the environment reproduces the golden, this run does too."""
     gold = json.load(open(GOLDEN))
     kw = dict(gold["config"])
-    kw["layers"] = kw.pop("bert_layers")
+    if "bert_layers" in kw:
+        kw["layers"] = kw.pop("bert_layers")   # golden predates the rename
     kw["poisoned"] = tuple(kw.get("poisoned", ()))
     run_kw = dict(global_rounds=gold["run"]["global_rounds"],
                   steps_per_round=gold["run"]["steps_per_round"])

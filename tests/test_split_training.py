@@ -79,13 +79,18 @@ def test_lossy_channel_still_trains():
         lambda lp: split_loss(CFG, frozen, lp, batch, split, ch)))
     losses = []
     lora2 = lora
-    for _ in range(8):
+    # lossy channel -> noisy steps: at lr 1e-2 the 8-step trajectory
+    # merely hovers (and which side of the start it lands on flips with
+    # the container's XLA codegen); at lr 2e-3 over 24 steps the descent
+    # is unambiguous (~1.28 -> ~0.68 here), so the assert carries a real
+    # margin instead of riding a knife edge
+    for _ in range(24):
         lv, g = g_fn(lora2)
-        lora2 = jax.tree_util.tree_map(lambda p, gg: p - 0.01 * gg, lora2, g)
+        lora2 = jax.tree_util.tree_map(lambda p, gg: p - 0.002 * gg,
+                                       lora2, g)
         losses.append(float(lv))
     assert np.isfinite(losses).all()
-    # lossy channel -> noisy steps; compare a tail average, not one sample
-    assert np.mean(losses[-3:]) < losses[0] + 0.02
+    assert np.mean(losses[-3:]) < losses[0] - 0.25
 
 
 def test_split_train_step_compiled_step_trains():
